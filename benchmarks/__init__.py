@@ -1,0 +1,3 @@
+"""Benchmark harness: one module per paper table/figure (paper_figures),
+plus Pallas-kernel microbenchmarks (kernels_bench).  Entry: benchmarks.run.
+"""

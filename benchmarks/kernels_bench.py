@@ -1,0 +1,75 @@
+"""Kernel microbenchmarks: wall time per call for each Pallas kernel (in
+interpret mode on CPU — correctness-path timing) and its jnp oracle (the
+XLA-compiled reference, the meaningful CPU number)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def bench_kernels():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    m = k = n = 512
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    t_ref = _time(jax.jit(ref.matmul_ref), a, b)
+    t_pal = _time(lambda x, y: ops.block_gemm(x, y), a, b)
+    flops = 2 * m * k * n
+    rows.append((f"kernel/block_gemm/{m}x{k}x{n}", t_pal, {
+        "oracle_us": round(t_ref * 1e6, 1),
+        "oracle_gflops": round(flops / t_ref / 1e9, 1),
+        "interpret_vs_oracle_x": round(t_pal / t_ref, 1),
+    }))
+
+    B, S, H, K, D = 1, 256, 4, 2, 64
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    kk = jnp.asarray(rng.standard_normal((B, S, K, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, K, D)), jnp.float32)
+    G = H // K
+    def oracle(q, kk, v):
+        qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+        kf = jnp.repeat(kk.transpose(0, 2, 1, 3), G, 1).reshape(B * H, S, D)
+        vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, 1).reshape(B * H, S, D)
+        return ref.attention_ref(qf, kf, vf)
+    t_ref = _time(jax.jit(oracle), q, kk, v)
+    t_pal = _time(lambda *x: ops.mha_flash(*x, bq=64, bk=64), q, kk, v)
+    rows.append((f"kernel/flash_attention/S={S}", t_pal, {
+        "oracle_us": round(t_ref * 1e6, 1),
+        "interpret_vs_oracle_x": round(t_pal / t_ref, 1),
+    }))
+
+    B, S, H, hd = 1, 128, 2, 32
+    r = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+    kx = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+    vx = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.2, 0.99, (B, S, H, hd)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((H, hd)), jnp.float32)
+    def oracle_wkv(r, kx, vx, w, u):
+        def flat(x):
+            return x.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+        uu = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, hd)
+        return ref.wkv6_ref(flat(r), flat(kx), flat(vx), flat(w), uu)
+    t_ref = _time(jax.jit(oracle_wkv), r, kx, vx, w, u)
+    t_pal = _time(lambda *x: ops.wkv6(*x, chunk=32), r, kx, vx, w, u)
+    rows.append((f"kernel/wkv6/S={S}", t_pal, {
+        "oracle_us": round(t_ref * 1e6, 1),
+        "interpret_vs_oracle_x": round(t_pal / t_ref, 1),
+    }))
+    return rows

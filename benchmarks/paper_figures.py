@@ -1,0 +1,304 @@
+"""One benchmark per paper table/figure (§5).  Each function returns a list
+of (name, seconds_per_call, derived_dict) rows; ``benchmarks.run`` prints
+them as ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import analysis, tail
+from repro.core.gemm_dag import build_dag
+from repro.core.scheduler import schedule
+from repro.configs.base import get_config
+from repro.sim import baselines, simulator as S
+from repro.sim.devices import median_fleet, sample_fleet
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return time.perf_counter() - t0, out
+
+
+def fig1_comm_volume():
+    """Per-device communication when training Llama2-13B (batch 128,
+    seq 1024): CLEAVE decreases with D; DTFM ~constant; Alpa (TP) worst."""
+    rows = []
+    cfg = get_config("llama2-13b")
+    dims = analysis.ModelDims(h=cfg.d_model, H=cfg.d_ff, L=cfg.n_layers,
+                              s=1024, B=128)
+    dag = build_dag(cfg, 128, 1024, attention_scores="ps")
+    for D in (32, 128, 512):
+        dt, sp = _timed(lambda: schedule(dag, median_fleet(D)))
+        dtfm = 2.0 * cfg.n_params()                     # grads once
+        alpa = analysis.baseline_3d_volume(dims, t=max(D // 64, 2), p=40)
+        rows.append((f"fig1/comm_volume/D={D}", dt, {
+            "cleave_gb": round(sp.max_per_device_comm / 1e9, 1),
+            "cleave_ideal_gb": round(
+                (dag.total_in_bytes() + dag.total_out_bytes()) / D / 1e9, 1),
+            "dtfm_gb": round(dtfm / 1e9, 1),
+            "alpa_gb": round(alpa / 1e9, 1),
+        }))
+    return rows
+
+
+def fig3_table8_perbatch():
+    """Normalized/absolute per-batch runtime vs baselines (Fig 3 + Table 8).
+    Two CLEAVE accountings (EXPERIMENTS.md §Paper-validation): Eq. 3 taken
+    literally (unicast) and the §3.1 idealized single-transmission
+    (broadcast, matching the published Table 8 arithmetic)."""
+    rows = []
+    for arch, D, paper_cleave, paper_dtfm, paper_cloud in (
+            ("opt-13b", 256, 37.3, 3466.7, 33.6),
+            ("llama2-13b", 512, 16.6, 3466.7, 33.6),
+            ("llama2-70b", 1024, 30.4, float("nan"), 180.8)):
+        dt, row = _timed(lambda: S.compare_systems(arch, 128, 1024, D))
+        dt2, row_b = _timed(lambda: S.compare_systems(
+            arch, 128, 1024, D, accounting="broadcast"))
+        rows.append((f"fig3_table8/{arch}/D={D}", dt + dt2, {
+            "cleave_unicast_s": round(row["cleave"], 1),
+            "cleave_broadcast_s": round(row_b["cleave"], 1),
+            "paper_cleave_s": paper_cleave,
+            "dtfm_s": round(row["dtfm"], 1),
+            "paper_dtfm_s": paper_dtfm,
+            "alpa_s": round(row["alpa"], 1),
+            "cloud_s": round(row["cloud"], 1),
+            "paper_cloud_s": paper_cloud,
+            "speedup_vs_dtfm": round(row["dtfm"] / row["cleave"], 1),
+        }))
+    return rows
+
+
+def fig4_multigpu():
+    """Multi-GPU cloud comparison: edge devices scale with GPU count."""
+    rows = []
+    for n_gpu, D in ((1, 512), (2, 1024), (4, 2048)):
+        def run():
+            cl = S.cleave_batch_time(get_config("opt-13b"), 128, 1024,
+                                     median_fleet(D),
+                                     accounting="broadcast")
+            cloud = baselines.cloud_batch_time(
+                get_config("opt-13b").n_params(), 128, 1024, n_gpus=n_gpu)
+            return cl, cloud
+        dt, (cl, cloud) = _timed(run)
+        rows.append((f"fig4/multigpu/gpus={n_gpu}", dt, {
+            "cleave_s": round(cl.batch_time, 1),
+            "cloud_s": round(cloud.batch_time, 1),
+            "ratio": round(cl.batch_time / cloud.batch_time, 2),
+        }))
+    return rows
+
+
+def fig5_memory():
+    dt, rows_ = _timed(lambda: S.memory_experiment(
+        archs=("opt-1.3b", "opt-13b", "llama2-13b", "opt-66b",
+               "llama2-70b")))
+    out = []
+    for r in rows_:
+        out.append((f"fig5/memory/{r['arch']}", dt / len(rows_), {
+            "cleave_mb": round(r["cleave_mb"], 1),
+            "dtfm_mb": round(r["dtfm_mb"], 1),
+            "alpa_mb": round(r["alpa_mb"], 1),
+            "phone_limit_mb": 512,
+            "cleave_fits_phone": bool(r["cleave_mb"] <= 512),
+        }))
+    return out
+
+
+def fig6_stragglers():
+    dt, rows_ = _timed(lambda: S.straggler_experiment(
+        fractions=(0.0, 0.05, 0.1, 0.2)))
+    out = []
+    for r in rows_:
+        out.append((f"fig6/stragglers/frac={r['fraction']}",
+                    dt / len(rows_), {
+            "cleave_norm": round(r["cleave_norm"], 2),
+            "alpa_norm": round(r["alpa_norm"], 2),
+            "dtfm_norm": round(r["dtfm_norm"], 2),
+            "ideal_norm": round(r["ideal_norm"], 2),
+            "cleave_vs_ideal_pct": round(
+                100 * (r["cleave_norm"] / max(r["ideal_norm"], 1e-9) - 1),
+                1),
+        }))
+    return out
+
+
+def fig7_churn():
+    dt, out = _timed(lambda: S.churn_experiment(n_devices=256))
+    return [("fig7/churn_recovery", dt, {
+        "cleave_s": round(out["cleave"], 2),
+        "mario_s": round(out["mario"], 1),
+        "bamboo_s": round(out["bamboo"], 1),
+        "swarm_s": round(out["swarm"], 1),
+        "asteroid_s": round(out["asteroid"], 1),
+        "speedup_vs_mario": round(out["mario"] / out["cleave"], 0),
+        "speedup_vs_layer_recompute": round(
+            out["swarm"] / out["cleave"], 0),
+        "recomputed_fraction": round(out["cleave_recompute_fraction"], 4),
+    })]
+
+
+def fig8_strong_scaling():
+    dt, rows_ = _timed(lambda: S.scaling_devices(
+        counts=(32, 64, 128, 256, 512, 1024)))
+    out = []
+    prev = None
+    for r in rows_:
+        speed = round(prev / r["cleave"], 2) if prev else None
+        prev = r["cleave"]
+        out.append((f"fig8/strong_scaling/D={r['devices']}",
+                    dt / len(rows_), {
+            "cleave_s": round(r["cleave"], 1),
+            "dtfm_s": round(r["dtfm"], 1),
+            "alpa_s": round(r["alpa"], 1),
+            "cleave_speedup_vs_halved_fleet": speed,
+        }))
+    return out
+
+
+def fig9_model_scaling():
+    dt, rows_ = _timed(lambda: S.scaling_model())
+    out = []
+    for r in rows_:
+        out.append((f"fig9/model_scaling/{r['arch']}/D={r['devices']}",
+                    dt / len(rows_), {
+            "cleave_s": round(r["cleave"], 1),
+            "dtfm_s": round(r["dtfm"], 1),
+            "alpa_s": round(r["alpa"], 1),
+        }))
+    return out
+
+
+def fig10_batch_scaling():
+    dt, rows_ = _timed(lambda: S.scaling_batch())
+    out = []
+    for r in rows_:
+        out.append((f"fig10/batch_scaling/D={r['devices']}",
+                    dt / len(rows_), {
+            "cleave_s": round(r["cleave"], 1),
+            "dtfm_s": round(r["dtfm"], 1),
+            "alpa_s": round(r["alpa"], 1),
+        }))
+    return out
+
+
+def table9_ablation():
+    dt, out = _timed(lambda: S.ablation(n_devices=512))
+    base = out["cleave"]
+    rows = [("table9/cleave_full", dt, {
+        "comm_gb": round(base["comm"] / 1e9, 2),
+        "mem_mb": round(base["mem"] / 1e6, 0),
+        "runtime_s": round(base["runtime"], 1)})]
+    for k in ("wo_tp", "wo_ps", "wo_hetero"):
+        rows.append((f"table9/{k}", 0.0, {
+            "comm_pct": round(100 * out[k]["comm"] / base["comm"], 0),
+            "mem_pct": round(100 * out[k]["mem"] / base["mem"], 0),
+            "runtime_pct": round(100 * out[k]["runtime"] / base["runtime"],
+                                 0),
+        }))
+    return rows
+
+
+def table12_tails():
+    dt, rows_ = _timed(tail.table12)
+    out = []
+    for r in rows_:
+        out.append((f"table12/{r['distribution'].replace(' ', '_')}",
+                    dt / len(rows_), {
+            "D100": round(r["D=100"], 1),
+            "D1000": round(r["D=1000"], 1),
+        }))
+    return out
+
+
+def table7_solver():
+    """Cold-start vs churn re-solve times (Table 7)."""
+    from repro.core import churn, cost_model as cm
+    rng = np.random.default_rng(0)
+    devs = sample_fleet(1024, rng)
+    cfg = get_config("llama2-70b")
+    dag = build_dag(cfg, 128, 1024, attention_scores="ps")
+    t0 = time.perf_counter()
+    sp = schedule(dag, devs)
+    cold = time.perf_counter() - t0
+    g = max(dag.gemms, key=lambda g: g.flops)
+    plan = sp.plans_by_shape[(g.m, g.n, g.q, g.b, g.count)]
+    victim = plan.assignments[0].device_id
+    event = churn.FailureEvent(gemm=g, failed_ids=[victim], plan=plan)
+    rec = churn.recover(event, devs)
+    return [("table7/solver", cold, {
+        "cold_start_s": round(cold, 1),
+        "paper_cold_start_s": 600,
+        "churn_resolve_s": round(rec.solve_time, 3),
+        "paper_churn_s": "seconds",
+    })]
+
+
+def sec6_appendixC_extensions():
+    """§6 / Appendix C extensions: streaming pipeline overlap, speculative
+    vs coded straggler mitigation, multi-PS envelope, energy model."""
+    from repro.core import streaming
+    from repro.core.cost_model import Device
+    from repro.core.cost_model import GEMM as G
+    t0 = time.perf_counter()
+    g = G(m=131072, n=5120, q=5120)
+    d = Device(flops=6e12, dl_bw=55e6, ul_bw=7.5e6, dl_lat=0.05,
+               ul_lat=0.01)
+    c = streaming.pair_cost(g, d, alpha=10, beta=10)
+    k = 64
+    # non-streamed: every pair pays the request round-trip overheads
+    serial = k * (d.dl_lat + c.t_dl + c.t_comp + c.t_ul + d.ul_lat)
+    piped = streaming.pipeline_time(c, k, dl_lat=0.05, ul_lat=0.01)
+    rng = np.random.default_rng(0)
+    jittered = float(np.mean([streaming.simulate_stream(
+        c, k, 0.05, 0.01, jitter=rng, pareto_alpha=2.0)
+        for _ in range(20)]))
+    r = streaming.choose_replication(10.0, 1.0, 2.0)
+    spec = streaming.speculative_latency(jittered, 2.0, r)
+    n = streaming.coded_design(k, 2.0)
+    coded = streaming.coded_latency(jittered, 2.0, k, n)
+    ps = streaming.multi_ps_plan(8192, 250e6 / 8)
+    en = streaming.energy_comparison(1e19, 512,
+                                     comm_seconds_per_device=3600.0)
+    dt = time.perf_counter() - t0
+    return [("sec6_appC/streaming_and_mitigations", dt, {
+        "serial_s": round(serial, 3),
+        "pipelined_s": round(piped, 3),
+        "overlap_speedup": round(serial / piped, 2),
+        "pareto2_jittered_s": round(jittered, 3),
+        "speculative_r": r,
+        "speculative_s": round(spec.expected_latency, 3),
+        "coded_n_for_k64": n,
+        "coded_s": round(coded.expected_latency, 3),
+        "coded_redundancy": round(coded.redundancy_factor, 2),
+        "multi_ps_for_8192_dev": ps.n_ps,
+        "energy_edge_advantage_x": round(en.ratio, 2),
+        "carbon_advantage_x": round(en.cloud_carbon_kg
+                                    / en.edge_carbon_kg, 2),
+    })]
+
+
+def sec6_adaptive_devices():
+    """§6 adaptation-to-active-devices + App. C.5 Thompson sampling: a
+    quarter of the fleet secretly degrades 8x mid-run; the bandit scheduler
+    learns from telemetry and recovers throughput, then re-admits."""
+    dt, rows_ = _timed(lambda: S.adaptive_experiment(n_devices=48,
+                                                     n_rounds=8))
+    out = []
+    for r in rows_:
+        out.append((f"sec6_adaptive/round={r['round']}",
+                    dt / len(rows_), {
+            "phase": "active" if r["active_phase"] else "idle",
+            "static_s": round(r["static_s"], 0),
+            "thompson_s": round(r["adaptive_s"], 0),
+            "oracle_s": round(r["oracle_s"], 0),
+        }))
+    return out
+
+
+ALL = [fig1_comm_volume, fig3_table8_perbatch, fig4_multigpu, fig5_memory,
+       fig6_stragglers, fig7_churn, fig8_strong_scaling, fig9_model_scaling,
+       fig10_batch_scaling, table9_ablation, table12_tails, table7_solver,
+       sec6_appendixC_extensions, sec6_adaptive_devices]

@@ -1,0 +1,49 @@
+"""Benchmark harness: one function per paper table/figure plus kernel
+microbenches.  Prints ``name,us_per_call,derived`` CSV.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run [--only substring] [--skip-kernels]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--skip-kernels", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import paper_figures
+    fns = list(paper_figures.ALL)
+    if not args.skip_kernels:
+        from benchmarks.kernels_bench import bench_kernels
+        fns.append(bench_kernels)
+
+    all_rows = []
+    print("name,us_per_call,derived")
+    for fn in fns:
+        if args.only and args.only not in fn.__name__:
+            continue
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{fn.__name__},NaN,\"ERROR: {type(e).__name__}: {e}\"",
+                  flush=True)
+            continue
+        for name, sec, derived in rows:
+            d = json.dumps(derived, default=str).replace('"', "'")
+            print(f"{name},{sec * 1e6:.1f},\"{d}\"", flush=True)
+            all_rows.append({"name": name, "us_per_call": sec * 1e6,
+                             "derived": derived})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(all_rows, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Quickstart: the CLEAVE pipeline end-to-end in 60 lines.
+
+1. Build a model config and trace its GEMM DAG.
+2. Sample a heterogeneous edge fleet and solve the schedule.
+3. Execute one GEMM's sub-task plan numerically (with Freivalds
+   verification) and survive a mid-level device failure.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core import cost_model as cm, executor
+from repro.core.gemm_dag import build_dag
+from repro.core.scheduler import schedule
+from repro.sim.devices import sample_fleet
+
+rng = np.random.default_rng(0)
+
+# 1. trace the GEMM DAG of OPT-13B at the paper's batch/seq setting
+cfg = get_config("opt-13b")
+dag = build_dag(cfg, batch=128, seq=1024, attention_scores="ps")
+print(f"model: {cfg.name}  params={cfg.n_params() / 1e9:.1f}B")
+print(f"DAG: {len(dag.gemms)} GEMM nodes, {dag.n_levels} levels, "
+      f"{dag.total_flops() / 1e12:.0f} TFLOPs/batch, "
+      f"{len(dag.unique_shapes())} unique shapes")
+
+# 2. schedule across 256 heterogeneous edge devices
+devices = sample_fleet(256, rng)
+plan = schedule(dag, devices)
+print(f"schedule: batch_time={plan.batch_time:.1f}s "
+      f"(gemm={plan.gemm_time:.1f}s + optimizer tail "
+      f"{plan.opt_tail * 1000:.0f}ms)")
+print(f"per-device comm <= {plan.max_per_device_comm / 1e9:.1f} GB, "
+      f"per-device memory <= {plan.max_per_device_mem / 1e6:.0f} MB "
+      f"(phone budget: 512 MB)")
+
+# 3. execute one weight GEMM's plan, kill a device mid-level, verify output
+g = cm.GEMM(m=1024, n=2048, q=1024)
+gplan = cm.solve_gemm(g, devices)
+A = rng.standard_normal((g.m, g.n)).astype(np.float32)
+B = rng.standard_normal((g.n, g.q)).astype(np.float32)
+victim = gplan.assignments[0].device_id
+report = executor.execute_plan(g, gplan, A, B, devices,
+                               fail_ids=[victim], rng=rng)
+err = np.abs(report.output - A.astype(np.float64) @ B).max()
+print(f"executed {report.n_tasks} sub-GEMM tasks "
+      f"({report.n_recovered} recovered after killing device {victim}); "
+      f"max error vs monolithic product: {err:.2e}; "
+      f"Freivalds verified: {report.verified}")
+print(f"recovery: {report.recovery.recomputed_fraction * 100:.2f}% of the "
+      f"output recomputed in {report.recovery.recovery_time:.3f}s "
+      f"(re-solve took {report.recovery.solve_time * 1000:.0f}ms)")

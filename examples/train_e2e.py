@@ -1,0 +1,32 @@
+"""End-to-end training driver (deliverable b): train a ~25-100M-param dense
+model for a few hundred steps on the synthetic corpus, with checkpointing
+and loss tracking.  Thin wrapper over ``repro.launch.train``.
+
+Run (CPU, ~10 min at the default scale):
+    PYTHONPATH=src python examples/train_e2e.py
+Faster sanity run:
+    PYTHONPATH=src python examples/train_e2e.py --steps 60 --d-model 256
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--d-model", type=int, default=512)
+ap.add_argument("--layers", type=int, default=8)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=128)
+ap.add_argument("--vocab", type=int, default=4096)
+ap.add_argument("--ckpt-dir", default=None)
+args = ap.parse_args()
+
+argv = ["--arch", "llama3-8b", "--reduced",
+        "--layers", str(args.layers), "--d-model", str(args.d_model),
+        "--vocab", str(args.vocab), "--steps", str(args.steps),
+        "--batch", str(args.batch), "--seq", str(args.seq),
+        "--lr", "6e-4", "--log-every", "10"]
+if args.ckpt_dir:
+    argv += ["--ckpt-dir", args.ckpt_dir]
+sys.exit(train_main(argv))

@@ -1,0 +1,22 @@
+import sys
+import jax
+import jax.numpy as jnp
+from repro.configs.base import get_config, list_configs
+from repro.models import model as M
+
+names = sys.argv[1:] or list_configs()
+key = jax.random.PRNGKey(0)
+for name in names:
+    cfg = get_config(name).reduced()
+    params = M.init_params(cfg, key)
+    B, S = 2, 16
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+             "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.modality == "vision":
+        batch["vision_embeds"] = jax.random.normal(key, (B, 4, cfg.d_model))
+    if cfg.enc_dec:
+        batch["encoder_feats"] = jax.random.normal(key, (B, 2 * S, cfg.d_model))
+    loss, metrics = jax.jit(lambda p, b: M.loss_fn(cfg, p, b))(params, batch)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"{name:24s} loss={float(loss):8.4f} params={n:,} "
+          f"nan={bool(jnp.isnan(loss))}")

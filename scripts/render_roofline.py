@@ -1,0 +1,33 @@
+"""Render the §Dry-run / §Roofline markdown tables from dryrun JSONs."""
+import json
+import sys
+
+
+def table(path, caption):
+    rows = json.load(open(path))
+    out = [f"\n**{caption}**\n",
+           "| arch | shape | mem/dev | fits | compute_s | memory_s | "
+           "collective_s | dominant | useful_flops | collectives |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR: {r['error'][:40]} |")
+            continue
+        t = r["roofline"]
+        coll = ", ".join(f"{k.split('-')[1] if '-' in k else k}:"
+                         f"{v['bytes'] / 1e9:.0f}GB"
+                         for k, v in r["collectives"].items()
+                         if v["bytes"] > 1e9)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{r['memory']['peak_per_device'] / 1e9:.2f} GB | "
+            f"{'✓' if r['memory']['fits_hbm'] else '✗'} | "
+            f"{t['compute_s']:.3f} | {t['memory_s']:.3f} | "
+            f"{t['collective_s']:.3f} | {r['dominant'].replace('_s', '')} | "
+            f"{r['useful_flops_ratio'] or 0:.2f} | {coll or '-'} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    for path, cap in zip(sys.argv[1::2], sys.argv[2::2]):
+        print(table(path, cap))

@@ -1,0 +1,6 @@
+"""CLEAVE reproduction: PS-centric sub-GEMM sharded FM training in JAX.
+
+Paper: "On Harnessing Idle Compute at the Edge for Foundation Model
+Training" (CS.DC 2025).  See DESIGN.md / EXPERIMENTS.md at the repo root.
+"""
+__version__ = "0.1.0"

@@ -1,0 +1,389 @@
+"""CLEAVE cost model and scheduler optimization (§4.1).
+
+Implements Eq. (1)–(7): per-device sub-GEMM cost
+    C(s,p,k) = max(C_dl, C_ul, C_comp)        (overlapped, Eq. 2)
+    C_dl = (α n b + n β b) / W_d + L_d        (Eq. 3)
+    C_ul = (α β b) / W_u + L_u
+    C_comp = 2 α β n / F                      (Eq. 4)
+subject to coverage Σ αβ = m q, all-or-nothing participation (Eq. 6), and
+memory (α + β) n b + α β b ≤ M (Eq. 7), plus the PS-side optimizer tail
+(Eq. 5).
+
+Solver (replaces the paper's Gurobi; DESIGN.md §4): for a candidate makespan
+T, the largest output share a device can finish within T is a closed-form
+monotone function s_k(T); binary-search the minimum feasible T with
+Σ s_k(T) ≥ 1.  Shares are then realized as an exact rectangular grid
+partition (row bands × per-band column slices) with largest-remainder integer
+rounding, and the *realized* makespan of that integer plan is returned, so
+reported numbers never rely on the continuous relaxation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Device:
+    """An edge device: compute + asymmetric link + memory (§2.1)."""
+    flops: float           # achievable FLOP/s
+    dl_bw: float           # downlink bytes/s (PS -> device)
+    ul_bw: float           # uplink bytes/s (device -> PS)
+    dl_lat: float = 0.01   # fixed per-transfer overhead L_d (s)
+    ul_lat: float = 0.01   # L_u (s)
+    memory: float = 512e6  # usable bytes
+    device_id: int = 0
+
+    def as_row(self):
+        return (self.flops, self.dl_bw, self.ul_bw, self.dl_lat,
+                self.ul_lat, self.memory)
+
+
+@dataclass(frozen=True)
+class PSConfig:
+    """Parameter-server capability (§5.1: datacenter-class coordinator)."""
+    net_bw: float = 25e9          # 200 Gbps
+    mem_bw: float = 150e9         # DDR5 host memory bytes/s
+    opt_bytes_per_param: float = 26.0   # Adam, BF16 w/grad + FP32 moments
+
+
+@dataclass(frozen=True)
+class GEMM:
+    """One GEMM node A(m,n) @ B(n,q); b = bytes per element."""
+    m: int
+    n: int
+    q: int
+    b: int = 2
+    name: str = ""
+    level: int = 0
+    layer: int = -1
+    count: int = 1       # identical independent GEMMs at this level
+
+    @property
+    def flops(self) -> float:
+        return 2.0 * self.m * self.n * self.q
+
+    @property
+    def in_bytes(self) -> float:
+        return (self.m * self.n + self.n * self.q) * self.b
+
+    @property
+    def out_bytes(self) -> float:
+        return self.m * self.q * self.b
+
+
+@dataclass
+class Assignment:
+    """Integer rectangle per device: rows [r0,r1) x cols [c0,c1)."""
+    device_id: int
+    r0: int
+    r1: int
+    c0: int
+    c1: int
+
+    @property
+    def alpha(self) -> int:
+        return self.r1 - self.r0
+
+    @property
+    def beta(self) -> int:
+        return self.c1 - self.c0
+
+
+@dataclass
+class Plan:
+    gemm: GEMM
+    assignments: list
+    makespan: float
+    lower_bound: float
+    excluded: list = field(default_factory=list)   # straggler device ids
+    n_split: int = 1   # contraction-dim splits (beyond-paper extension: when
+                       # rows/cols of a huge-n GEMM exceed device memory the
+                       # PS streams n in `n_split` rounds and accumulates
+                       # partial outputs host-side)
+    instances: Optional[dict] = None   # device_id -> whole instances, for
+                                       # batched (count>1) level scheduling
+
+
+# ------------------------------------------------------------ cost helpers --
+
+def device_cost(gemm: GEMM, dev: Device, alpha: float, beta: float,
+                rows_cached: float = 0.0, cols_cached: float = 0.0):
+    """Eq. (2)-(4) with cache-aware DL discount (§4.2).  Returns
+    (total, dl, ul, comp)."""
+    if alpha <= 0 or beta <= 0:
+        return 0.0, 0.0, 0.0, 0.0
+    a_dl = max(alpha - rows_cached, 0.0)
+    b_dl = max(beta - cols_cached, 0.0)
+    dl = (a_dl * gemm.n + gemm.n * b_dl) * gemm.b / dev.dl_bw + dev.dl_lat
+    ul = alpha * beta * gemm.b / dev.ul_bw + dev.ul_lat
+    comp = 2.0 * alpha * beta * gemm.n / dev.flops
+    return max(dl, ul, comp), dl, ul, comp
+
+
+def plan_makespan(gemm: GEMM, devices: Sequence[Device], plan: Plan) -> float:
+    t = 0.0
+    dev_by_id = {d.device_id: d for d in devices}
+    for a in plan.assignments:
+        c, *_ = device_cost(gemm, dev_by_id[a.device_id], a.alpha, a.beta)
+        t = max(t, c)
+    return t
+
+
+def lower_bound(gemm: GEMM, devices: Sequence[Device]) -> float:
+    """Appendix B Eq. (18) extended with link capacity terms."""
+    W = gemm.flops
+    F = sum(d.flops for d in devices)
+    t_comp = W / F
+    # aggregate input dispatch over total DL; output over total UL
+    t_dl = gemm.in_bytes / sum(d.dl_bw for d in devices)
+    t_ul = gemm.out_bytes / sum(d.ul_bw for d in devices)
+    return max(t_comp, t_dl, t_ul)
+
+
+# ----------------------------------------------------------------- solver --
+
+def _max_share(gemm: GEMM, dev: Device, T: float,
+               rows_cached: float = 0.0, cols_cached: float = 0.0):
+    """Largest output share s = αβ/(mq) device can finish within T, with the
+    balanced-aspect block choice; returns (s, alpha, beta)."""
+    m, n, q, b = gemm.m, gemm.n, gemm.q, gemm.b
+    lat = max(dev.dl_lat, dev.ul_lat)
+    if T <= lat:
+        return 0.0, 0.0, 0.0
+    # perimeter cap from DL time: (α - rc + β - cc) n b / Wd + Ld <= T
+    P_dl = (T - dev.dl_lat) * dev.dl_bw / (n * b) + rows_cached + cols_cached
+    # area caps
+    A_ul = (T - dev.ul_lat) * dev.ul_bw / b
+    A_comp = T * dev.flops / (2.0 * n)
+    # memory: (α + β) n b + α β b <= M  ->  with α+β = P: P n b + A b <= M
+    # binary search the largest feasible perimeter P under memory + DL
+    def area_given_P(P):
+        # maximize αβ s.t. α+β <= P, α <= m, β <= q
+        half = P / 2.0
+        a = min(m, half)
+        bb = min(q, P - a)
+        if bb > q:
+            bb = q
+            a = min(m, P - q)
+        return max(a, 0.0) * max(bb, 0.0), a, bb
+
+    P_hi = min(P_dl, float(m + q))
+    if P_hi <= 0:
+        return 0.0, 0.0, 0.0
+    # memory feasibility is monotone in P: shrink until it fits
+    lo, hi = 0.0, P_hi
+    for _ in range(40):
+        mid = 0.5 * (lo + hi)
+        area, _, _ = area_given_P(mid)
+        if mid * n * b + area * b <= dev.memory:
+            lo = mid
+        else:
+            hi = mid
+    P = lo
+    area, a, bb = area_given_P(P)
+    area = min(area, A_ul, A_comp, float(m) * q)
+    if area <= 0:
+        return 0.0, 0.0, 0.0
+    # re-balance α,β to the capped area while honoring α+β <= P
+    r = np.sqrt(area)
+    a2 = min(m, max(r, area / q))
+    b2 = area / a2
+    if a2 + b2 > P + 1e-9:   # shouldn't happen; clamp
+        b2 = max(P - a2, 0.0)
+        area = a2 * b2
+    return area / (float(m) * q), a2, b2
+
+
+def solve_gemm(gemm: GEMM, devices: Sequence[Device],
+               caches: Optional[dict] = None,
+               tol: float = 1e-3) -> Plan:
+    """Binary-search the makespan; realize shares as an exact integer grid
+    partition.  `caches`: device_id -> (rows_cached, cols_cached) for the
+    churn-recovery reuse (§4.2)."""
+    caches = caches or {}
+    lb = lower_bound(gemm, devices)
+    # upper bound: best single device running the whole GEMM
+    ub = min(device_cost(gemm, d, gemm.m, gemm.q)[0] for d in devices)
+    ub = max(ub, lb * 2, 1e-6)
+
+    def feasible(T):
+        tot = 0.0
+        for d in devices:
+            rc, cc = caches.get(d.device_id, (0.0, 0.0))
+            s, _, _ = _max_share(gemm, d, T, rc, cc)
+            tot += s
+            if tot >= 1.0:
+                return True
+        return tot >= 1.0
+
+    # Memory-infeasible regardless of T (Σ s_k saturates below 1 because the
+    # memory constraint Eq. 7 caps every device): split the contraction dim
+    # and accumulate partials on the PS (beyond-paper extension; uplink pays
+    # n_split × the output volume, captured by the recursive makespan).
+    if not feasible(ub * 64):
+        if gemm.n < 2:
+            raise RuntimeError("infeasible GEMM schedule (memory too small?)")
+        half = GEMM(m=gemm.m, n=(gemm.n + 1) // 2, q=gemm.q, b=gemm.b,
+                    name=gemm.name, level=gemm.level, layer=gemm.layer,
+                    count=gemm.count)
+        sub = solve_gemm(half, devices, caches=caches, tol=tol)
+        return Plan(gemm=gemm, assignments=sub.assignments,
+                    makespan=2.0 * sub.makespan, lower_bound=lb,
+                    excluded=sub.excluded, n_split=2 * sub.n_split)
+
+    while not feasible(ub):
+        ub *= 2.0
+        if ub > 1e9:
+            raise RuntimeError("infeasible GEMM schedule (memory too small?)")
+    lo, hi = lb, ub
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        if feasible(mid):
+            hi = mid
+        else:
+            lo = mid
+        if hi - lo < tol * hi:
+            break
+    T = hi
+
+    shares = []
+    for d in devices:
+        rc, cc = caches.get(d.device_id, (0.0, 0.0))
+        s, a, b = _max_share(gemm, d, T, rc, cc)
+        shares.append((d, s, a, b))
+    total = sum(s for _, s, _, _ in shares)
+    # scale shares down to exactly 1 (proportional), drop zeros (Eq. 6)
+    shares = [(d, s / total, a, b) for d, s, a, b in shares if s > 1e-12]
+    excluded = [d.device_id for d in devices
+                if d.device_id not in {x[0].device_id for x in shares}]
+
+    assignments = _grid_partition(gemm, shares)
+    plan = Plan(gemm=gemm, assignments=assignments, makespan=0.0,
+                lower_bound=lb, excluded=excluded)
+    plan.makespan = plan_makespan(gemm, devices, plan)
+    return plan
+
+
+def _grid_partition(gemm: GEMM, shares) -> list:
+    """Partition the m x q output into exact integer rectangles matching the
+    given shares: devices grouped into row bands (heights by band share),
+    column slices within each band (widths by within-band share)."""
+    m, q = gemm.m, gemm.q
+    D = len(shares)
+    # desired per-device aspect: α from solver; group devices into bands
+    n_bands = int(np.clip(round(np.sqrt(D * m / max(q, 1))), 1, min(D, m)))
+    order = sorted(range(D), key=lambda i: -shares[i][1])
+    bands = [[] for _ in range(n_bands)]
+    band_tot = np.zeros(n_bands)
+    for i in order:                      # greedy balance band totals
+        jmin = int(np.argmin(band_tot))
+        bands[jmin].append(i)
+        band_tot[jmin] += shares[i][1]
+    bands = [b for b in bands if b]
+    band_tot = np.array([sum(shares[i][1] for i in b) for b in bands])
+    heights = _largest_remainder(band_tot / band_tot.sum() * m, m)
+    # drop zero-height bands, merging their devices into the largest band
+    merged = []
+    for b, h in zip(bands, heights):
+        if h == 0:
+            merged.extend(b)
+    if merged:
+        keep = [(b, h) for b, h in zip(bands, heights) if h > 0]
+        keep[0][0].extend(merged)
+        bands, heights = [b for b, _ in keep], [h for _, h in keep]
+
+    assignments = []
+    r0 = 0
+    for b, h in zip(bands, heights):
+        w_share = np.array([shares[i][1] for i in b])
+        widths = _largest_remainder(w_share / w_share.sum() * q, q)
+        c0 = 0
+        for i, w in zip(b, widths):
+            if w > 0 and h > 0:
+                assignments.append(Assignment(
+                    device_id=shares[i][0].device_id,
+                    r0=r0, r1=r0 + h, c0=c0, c1=c0 + w))
+            c0 += w
+        r0 += h
+    return assignments
+
+
+def _largest_remainder(real_parts: np.ndarray, total: int) -> list:
+    fl = np.floor(real_parts).astype(int)
+    rem = int(total - fl.sum())
+    order = np.argsort(-(real_parts - fl))
+    for i in range(rem):
+        fl[order[i % len(fl)]] += 1
+    return fl.tolist()
+
+
+def solve_batched(gemm: GEMM, devices: Sequence[Device],
+                  tol: float = 1e-3) -> Plan:
+    """Instance-granular scheduling for `count`-many identical independent
+    GEMMs at one level (e.g. per-(batch, head) attention GEMMs, per-expert
+    MoE GEMMs).  Each device processes whole instances streamed over its
+    link (one fixed latency per level, per-instance transfers pipelined);
+    binary-search the level makespan T with w_k(T) instances per device."""
+    C = gemm.count
+    inst_dl = gemm.in_bytes
+    inst_ul = gemm.out_bytes
+    inst_fl = gemm.flops
+
+    def inst_time(d: Device):
+        return max(inst_dl / d.dl_bw, inst_ul / d.ul_bw, inst_fl / d.flops)
+
+    fits = [d for d in devices
+            if inst_dl + inst_ul <= d.memory]
+    if not fits:
+        # fall back to sub-GEMM decomposition of single instances
+        p = solve_gemm(gemm, devices, tol=tol)
+        p.makespan *= C
+        return p
+
+    def cap(d, T):
+        lat = max(d.dl_lat, d.ul_lat)
+        return max(0.0, (T - lat) / inst_time(d))
+
+    lo = 0.0
+    hi = max(d.dl_lat + d.ul_lat for d in fits) + \
+        C * min(inst_time(d) for d in fits)
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        if sum(cap(d, mid) for d in fits) >= C:
+            hi = mid
+        else:
+            lo = mid
+        if hi - lo < tol * hi:
+            break
+    T = hi
+    caps = np.array([cap(d, T) for d in fits])
+    w = _largest_remainder(caps / max(caps.sum(), 1e-12) * C, C)
+    assignments = [Assignment(device_id=d.device_id, r0=0, r1=gemm.m,
+                              c0=0, c1=gemm.q)
+                   for d, wi in zip(fits, w) if wi > 0]
+    inst_per_dev = {d.device_id: wi for d, wi in zip(fits, w) if wi > 0}
+    real = max((max(d.dl_lat, d.ul_lat) + wi * inst_time(d))
+               for d, wi in zip(fits, w) if wi > 0)
+    plan = Plan(gemm=gemm, assignments=assignments, makespan=real,
+                lower_bound=lower_bound(gemm, devices),
+                excluded=[d.device_id for d in devices
+                          if d.device_id not in inst_per_dev])
+    plan.instances = inst_per_dev
+    return plan
+
+
+# --------------------------------------------------------- optimizer tail --
+
+def optimizer_time(gemm: GEMM, ps: PSConfig) -> float:
+    """Eq. (5): PS-side Adam traffic for this GEMM's weight matrix."""
+    return ps.opt_bytes_per_param * gemm.n * gemm.q / ps.mem_bw
+
+
+def optimizer_tail(gemms: Sequence[GEMM], ps: PSConfig) -> float:
+    """C_OPTTAIL = max over weight GEMMs (pipelined by DAG level, §4.1)."""
+    ts = [optimizer_time(g, ps) for g in gemms if g.layer >= 0]
+    return max(ts) if ts else 0.0

@@ -1,0 +1,170 @@
+"""CLEAVE PS scheduler (§3.2, §4.1).
+
+Processes the GEMM DAG level-by-level.  The cost-model optimization is solved
+once per *unique GEMM shape* and reused across layers/levels (the paper's
+cold-start amortization, Table 7).  Outputs:
+
+* a :class:`SchedulePlan` with per-GEMM device assignments,
+* the composed batch latency C_BATCH = C_GEMM(S-1) + C_OPTTAIL (Eq. 1 + §4.1),
+* per-device communication and memory accounting (Figs. 1 and 5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import cost_model as cm
+from repro.core.gemm_dag import GemmDag
+
+
+@dataclass
+class SchedulePlan:
+    dag: GemmDag
+    devices: list
+    plans_by_shape: Dict[tuple, cm.Plan]
+    batch_time: float
+    gemm_time: float
+    opt_tail: float
+    level_times: list
+    per_device_comm: Dict[int, float]       # bytes per batch per device
+    per_device_dl: Dict[int, float]
+    per_device_ul: Dict[int, float]
+    per_device_mem: Dict[int, float]        # peak bytes
+    excluded: set = field(default_factory=set)
+
+    @property
+    def max_per_device_comm(self) -> float:
+        vals = [v for k, v in self.per_device_comm.items()
+                if k not in self.excluded]
+        return max(vals) if vals else 0.0
+
+    @property
+    def max_per_device_mem(self) -> float:
+        vals = [v for k, v in self.per_device_mem.items()
+                if k not in self.excluded]
+        return max(vals) if vals else 0.0
+
+
+def plan_shape_key(g: cm.GEMM) -> tuple:
+    return (g.m, g.n, g.q, g.b)
+
+
+def schedule(dag: GemmDag, devices: Sequence[cm.Device],
+             ps: Optional[cm.PSConfig] = None,
+             heterogeneity_aware: bool = True) -> SchedulePlan:
+    """Solve the batch schedule.  With `heterogeneity_aware=False` every
+    device gets an equal share regardless of capability (Table 9 ablation)."""
+    ps = ps or cm.PSConfig()
+    real_devices = list(devices)
+    if not heterogeneity_aware:
+        # plan as if homogeneous (equal shards), but *evaluate* on the real
+        # fleet: the slowest participant bounds each level (Table 9)
+        devices = _homogenize(devices)
+
+    plans: Dict[tuple, cm.Plan] = {}
+    for g in dag.gemms:
+        k = plan_shape_key(g) + (g.count,)
+        if k in plans:
+            continue
+        if g.count > 1:
+            # count-many independent instances: schedule whole instances
+            # across the pool (streamed), unless decomposing each instance
+            # into sub-GEMM waves is faster.
+            batched = cm.solve_batched(g, devices)
+            sub = cm.solve_gemm(g, devices)
+            waves = _wave_factor(g, sub, len(devices))
+            if batched.makespan <= sub.makespan * waves:
+                plans[k] = batched
+            else:
+                sub.makespan *= waves
+                plans[k] = sub
+        else:
+            plans[k] = cm.solve_gemm(g, devices)
+
+    if not heterogeneity_aware:
+        by_id = {d.device_id: d for d in real_devices}
+        for p in plans.values():
+            if p.instances is not None:
+                t = 0.0
+                for did, wi in p.instances.items():
+                    d = by_id[did]
+                    it = max(p.gemm.in_bytes / d.dl_bw,
+                             p.gemm.out_bytes / d.ul_bw,
+                             p.gemm.flops / d.flops)
+                    t = max(t, max(d.dl_lat, d.ul_lat) + wi * it)
+                p.makespan = t
+            else:
+                p.makespan = cm.plan_makespan(p.gemm, real_devices, p) \
+                    * p.n_split
+        devices = real_devices
+
+    level_times = []
+    for level in dag.levels():
+        # GEMMs inside a level are independent; the slowest GEMM in the
+        # level is the level latency (Eq. 1).  count>1 GEMMs already carry
+        # their batched/wave makespan from the solve above.
+        t = 0.0
+        for g in level:
+            t = max(t, plans[plan_shape_key(g) + (g.count,)].makespan)
+        level_times.append(t)
+    gemm_time = float(sum(level_times))
+    opt_tail = cm.optimizer_tail(dag.gemms, ps)
+    batch_time = gemm_time + opt_tail
+
+    dl, ul, mem = _accounting(dag, plans)
+    comm = {k: dl.get(k, 0.0) + ul.get(k, 0.0) for k in dl}
+    excluded = set.intersection(*[set(p.excluded) for p in plans.values()]) \
+        if plans else set()
+    return SchedulePlan(
+        dag=dag, devices=list(devices), plans_by_shape=plans,
+        batch_time=batch_time, gemm_time=gemm_time, opt_tail=opt_tail,
+        level_times=level_times, per_device_comm=comm, per_device_dl=dl,
+        per_device_ul=ul, per_device_mem=mem, excluded=excluded)
+
+
+def _wave_factor(g: cm.GEMM, plan: cm.Plan, n_devices: int) -> float:
+    """`count` independent instances of the same GEMM at one level share the
+    device pool.  The solver's plan uses the full pool for one instance; the
+    aggregate work of `count` instances therefore takes ~count × the
+    single-instance makespan when the single instance is already
+    pool-saturating, but small instances (e.g. per-head s×s attention GEMMs)
+    are instead spread across the pool in parallel waves."""
+    if g.count <= 1:
+        return 1.0
+    used = max(len(plan.assignments), 1)
+    concurrent = max(n_devices // used, 1)
+    return float(int(np.ceil(g.count / concurrent)))
+
+
+def _homogenize(devices):
+    f = np.mean([d.flops for d in devices])
+    dlb = np.mean([d.dl_bw for d in devices])
+    ulb = np.mean([d.ul_bw for d in devices])
+    mem = np.min([d.memory for d in devices])
+    return [dataclasses.replace(d, flops=f, dl_bw=dlb, ul_bw=ulb, memory=mem)
+            for d in devices]
+
+
+def _accounting(dag: GemmDag, plans):
+    dl: Dict[int, float] = {}
+    ul: Dict[int, float] = {}
+    mem: Dict[int, float] = {}
+    for g in dag.gemms:
+        p = plans[plan_shape_key(g) + (g.count,)]
+        if p.instances is not None:
+            for did, wi in p.instances.items():
+                dl[did] = dl.get(did, 0.0) + wi * g.in_bytes
+                ul[did] = ul.get(did, 0.0) + wi * g.out_bytes
+                mem[did] = max(mem.get(did, 0.0), g.in_bytes + g.out_bytes)
+            continue
+        for a in p.assignments:
+            d_in = (a.alpha * g.n + g.n * a.beta) * g.b * g.count
+            d_out = a.alpha * a.beta * g.b * g.count
+            dl[a.device_id] = dl.get(a.device_id, 0.0) + d_in
+            ul[a.device_id] = ul.get(a.device_id, 0.0) + d_out
+            need = ((a.alpha + a.beta) * g.n + a.alpha * a.beta) * g.b
+            mem[a.device_id] = max(mem.get(a.device_id, 0.0), need)
+    return dl, ul, mem

@@ -1,0 +1,28 @@
+"""Freivalds verification against poisoning (§6, Robustness).
+
+For a returned block C =? A @ B the PS samples random vectors r, s and checks
+r^T (A (B s)) == (r^T C) s up to fp tolerance — O(n^2) work instead of
+O(n^3), false-negative probability O(2^-n) over repeated trials with
+fresh randomness.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def freivalds(A: np.ndarray, B: np.ndarray, C: np.ndarray,
+              rng: np.random.Generator, iters: int = 2,
+              rtol: float = 1e-9) -> bool:
+    """True iff C passes `iters` independent Freivalds checks of C == A@B."""
+    m, n = A.shape
+    n2, q = B.shape
+    assert n == n2 and C.shape == (m, q)
+    for _ in range(iters):
+        r = rng.choice((-1.0, 1.0), size=m).astype(np.float64)
+        s = rng.choice((-1.0, 1.0), size=q).astype(np.float64)
+        lhs = r @ A.astype(np.float64) @ (B.astype(np.float64) @ s)
+        rhs = (r @ C.astype(np.float64)) @ s
+        scale = np.abs(r) @ np.abs(C.astype(np.float64)) @ np.abs(s) + 1e-30
+        if not np.isclose(lhs, rhs, rtol=rtol, atol=rtol * scale):
+            return False
+    return True

@@ -1,0 +1,84 @@
+"""Pallas TPU flash-decode kernel: single-token attention over a long KV
+cache (the decode_32k / long_500k hot path).
+
+Grid: (B*H, cache_blocks) with the cache axis innermost/sequential; running
+(max, denom, accumulator) live in VMEM scratch — the kernel analog of
+``repro.models.attention.decode_attention`` / ``_decode_attention_sharded``
+(per-shard partial scores + LSE combine; across devices the combine is the
+shard_map pmax/psum, inside a device it is this kernel's sequential grid).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, scale, bs, ns):
+    sj = pl.program_id(1)
+
+    @pl.when(sj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (1, d)
+    k = k_ref[0].astype(jnp.float32)                  # (bs, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (1, bs)
+    ok = valid_ref[0].reshape(1, bs)
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    p = jnp.exp(s - m_new) * ok                       # (1, bs)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p)
+    pv = jax.lax.dot_general(p.astype(v_ref.dtype), v_ref[0],
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (1, d)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+
+    @pl.when(sj == ns - 1)
+    def _store():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 valid: jax.Array, *, bs: int = 512,
+                 interpret: bool = False):
+    """q: (BH, 1, D); k, v: (BH, S, D); valid: (BH, S) bool (ring-buffer
+    occupancy mask).  Returns (BH, 1, D)."""
+    BH, S, D = k.shape
+    bs = min(bs, S)
+    assert S % bs == 0, (S, bs)
+    grid = (BH, S // bs)
+    scale = 1.0 / np.sqrt(D)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, bs=bs, ns=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda h, j: (h, 0, 0)),
+            pl.BlockSpec((1, bs, D), lambda h, j: (h, j, 0)),
+            pl.BlockSpec((1, bs, D), lambda h, j: (h, j, 0)),
+            pl.BlockSpec((1, bs), lambda h, j: (h, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda h, j: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, 1, D), v.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, valid)

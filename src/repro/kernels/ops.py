@@ -1,0 +1,90 @@
+"""jit'd wrappers around the Pallas kernels: shape padding, GQA head
+expansion, backend dispatch (interpret=True on CPU — kernels execute in
+Python for correctness validation; compiled on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import block_gemm as _bg
+from repro.kernels import flash_attention as _fa
+from repro.kernels import wkv6 as _wkv
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def block_gemm(a, b, *, bm=128, bn=128, bk=128):
+    """Padded/tiled C = A @ B through the Pallas sub-GEMM kernel."""
+    m, k = a.shape
+    _, n = b.shape
+    bm2, bn2, bk2 = min(bm, m), min(bn, n), min(bk, k)
+    a, pm = _pad_to(a, bm2, 0)
+    a, pk = _pad_to(a, bk2, 1)
+    b, _ = _pad_to(b, bk2, 0)
+    b, pn = _pad_to(b, bn2, 1)
+    out = _bg.block_gemm(a, b, bm=bm2, bn=bn2, bk=bk2,
+                         interpret=_interpret())
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "bq", "bk"))
+def mha_flash(q, k, v, *, causal=True, window=0, bq=128, bk=128):
+    """GQA flash attention. q: (B,S,H,D); k,v: (B,S,K,D); H % K == 0.
+    Returns (B,S,H,D)."""
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, S, D)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, S, D)
+    out = _fa.flash_attention(qf, kf, vf, causal=causal, window=window,
+                              bq=min(bq, S), bk=min(bk, S),
+                              interpret=_interpret())
+    return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("bs",))
+def gqa_flash_decode(q, k, v, valid, *, bs=512):
+    """Single-token GQA decode. q: (B,1,H,D); k,v: (B,S,K,D);
+    valid: (S,) bool. Returns (B,1,H,D)."""
+    from repro.kernels import decode_attention as _dec
+    B, _, H, D = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, 1, D)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, S, D)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, S, D)
+    vm = jnp.broadcast_to(valid[None], (B * H, S))
+    out = _dec.flash_decode(qf, kf, vf, vm, bs=min(bs, S),
+                            interpret=_interpret())
+    return out.reshape(B, H, 1, D).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def wkv6(r, k, v, w, u, *, chunk=32):
+    """RWKV-6 recurrence. r,k,v,w: (B,S,H,hd); u: (H,hd) ->
+    (B,S,H,hd) float32."""
+    B, S, H, hd = r.shape
+    def flat(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    uu = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, hd)
+    y = _wkv.wkv6(flat(r), flat(k), flat(v), flat(w), uu, chunk=chunk,
+                  interpret=_interpret())
+    return y.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

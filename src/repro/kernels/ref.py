@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def matmul_ref(a, b, out_dtype=None):
+    out = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+    return out.astype(out_dtype or a.dtype)
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """Naive softmax attention. q: (BH,Sq,D); k,v: (BH,Sk,D)."""
+    BH, Sq, D = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / np.sqrt(D)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[None], p, 0.0)
+    out = jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, w, u):
+    """Step-exact RWKV-6 recurrence. r,k,v,w: (BH,S,hd); u: (BH,hd).
+    Returns float32 (BH,S,hd)."""
+    BH, S, hd = r.shape
+    f32 = jnp.float32
+    r_, k_, v_, w_ = (a.astype(f32) for a in (r, k, v, w))
+    u_ = u.astype(f32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                    # (BH, hd)
+        kv = kt[:, :, None] * vt[:, None, :]    # (BH, hd, hd)
+        y = jnp.einsum("bd,bde->be", rt, s + u_[:, :, None] * kv)
+        s = wt[:, :, None] * s + kv
+        return s, y
+
+    s0 = jnp.zeros((BH, hd, hd), f32)
+    _, ys = jax.lax.scan(step, s0,
+                         (r_.swapaxes(0, 1), k_.swapaxes(0, 1),
+                          v_.swapaxes(0, 1), w_.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1)

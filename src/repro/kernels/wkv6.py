@@ -1,0 +1,89 @@
+"""Pallas TPU kernel for the RWKV-6 (Finch) WKV recurrence.
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+Grid: (B*H, n_chunks) with chunks innermost/sequential; the (hd x hd) state
+is carried in VMEM scratch across chunk steps.  Within a chunk the update is
+the dense chunked form (cumulative log-decay products, strictly-lower
+triangular intra-chunk matrix) — identical math to
+``repro.models.rwkv.wkv_chunked`` and validated against the step-exact
+oracle ``kernels.ref.wkv6_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_ref, *,
+                c, hd, n_chunks):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)          # (c, hd)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lw = lw_ref[0].astype(jnp.float32)        # log-decay, <= 0
+    u = u_ref[0].astype(jnp.float32)          # (1, hd) bonus
+
+    cum = jnp.cumsum(lw, axis=0)              # W_t inclusive
+    wprev = cum - lw                          # W_{t-1} (0 at t=0)
+
+    # inter-chunk: y_inter[t] = (r_t ⊙ exp(W_{t-1})) @ S_in
+    y_inter = jax.lax.dot_general(
+        r * jnp.exp(wprev), s_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)    # (c, hd_v)
+
+    # intra-chunk pairwise decays: exp(W_{t-1} - W_j) for j < t (always <= 0)
+    diff = wprev[:, None, :] - cum[None, :, :]           # (c, c, hd)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0) \
+        > jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    dec = jnp.where(tri[:, :, None], jnp.exp(diff), 0.0)
+    A = jnp.einsum("td,jd,tjd->tj", r, k, dec,
+                   preferred_element_type=jnp.float32)
+    diag = jnp.sum(r * u * k, axis=1)
+    A = A + jnp.diag(diag)
+    y = y_inter + jax.lax.dot_general(
+        A, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    o_ref[0] = y.astype(o_ref.dtype)
+
+    # carry: S' = diag(exp(W_c)) S + sum_j (exp(W_c - W_j) ⊙ k_j) v_j^T
+    wc = cum[-1]
+    kdec = k * jnp.exp(wc[None, :] - cum)
+    s_ref[...] = s_ref[...] * jnp.exp(wc)[:, None] + jax.lax.dot_general(
+        kdec, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def wkv6(r, k, v, w, u, *, chunk: int = 32, interpret: bool = False):
+    """r,k,v,w: (BH, S, hd) with w the per-step decay in (0,1);
+    u: (BH, hd).  Returns y: (BH, S, hd) float32."""
+    BH, S, hd = r.shape
+    c = min(chunk, S)
+    assert S % c == 0, (S, c)
+    lw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-12))
+    u2 = u.reshape(BH, 1, hd)
+    grid = (BH, S // c)
+    return pl.pallas_call(
+        functools.partial(_wkv_kernel, c=c, hd=hd, n_chunks=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, c, hd), lambda h, t: (h, t, 0)),
+            pl.BlockSpec((1, c, hd), lambda h, t: (h, t, 0)),
+            pl.BlockSpec((1, c, hd), lambda h, t: (h, t, 0)),
+            pl.BlockSpec((1, c, hd), lambda h, t: (h, t, 0)),
+            pl.BlockSpec((1, 1, hd), lambda h, t: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, hd), lambda h, t: (h, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, lw, u2)

@@ -1,0 +1,286 @@
+"""Trip-count-aware static HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body **once**, which
+makes it useless for scan-over-layers programs (a 64-layer model reports
+1/64th of its FLOPs).  This analyzer parses the post-SPMD HLO text, builds
+the computation call graph (while bodies/conditions, fusions, calls), and
+propagates loop trip counts (``known_trip_count``) down the graph so that:
+
+  * dot FLOPs             — 2 · |output| · |contracting dims|, weighted
+  * HBM bytes             — per top-level op: output + operand bytes
+                            (ops inside fusion bodies don't touch HBM)
+  * collective bytes      — all-gather / all-reduce / reduce-scatter /
+                            all-to-all / collective-permute operand bytes
+
+are all reported **per executed step**, per device (HLO shapes are already
+per-shard after SPMD partitioning).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+_DT_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+             "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+             "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z0-9]*)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_KIND_RE = re.compile(r"(?:\]|\})\s*\)?\s*([a-z][a-z0-9\-]*)\(")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_CALLED = re.compile(
+    r"(?:body|condition|to_apply|calls)=\s*\{?%?([\w.\-]+)\}?")
+_TRIP = re.compile(r'"known_trip_count":\s*\{\s*"n":\s*"(\d+)"')
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _dims_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shapes_of(text: str):
+    """[(dtype, [dims], bytes)] for every TYPE[d0,d1,...] in `text`."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DT_BYTES:
+            continue
+        dlist = [int(x) for x in dims.split(",") if x]
+        out.append((dt, dlist, _dims_elems(dims) * _DT_BYTES[dt]))
+    return out
+
+
+@dataclass
+class OpInfo:
+    name: str
+    kind: str
+    out_bytes: int
+    operand_names: list
+    called: list
+    trip: int
+    collective: Optional[str]
+    contract_dims: list
+    line_no: int
+    param_idx: int = -1
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[OpInfo] = field(default_factory=list)
+    entry: bool = False
+
+
+def parse_hlo(text: str):
+    comps: Dict[str, Computation] = {}
+    shapes: Dict[str, list] = {}      # op name -> [(dt, dims, bytes)]
+    cur: Optional[Computation] = None
+    for ln, raw in enumerate(text.splitlines()):
+        line = raw.strip()
+        if not line:
+            continue
+        if not raw.startswith((" ", "\t")):
+            hdr = _COMP_HDR.match(raw)
+            if hdr:
+                cur = Computation(name=hdr.group(2),
+                                  entry=bool(hdr.group(1)))
+                comps[cur.name] = cur
+                continue
+        d = _DEF_RE.match(line)
+        if cur is None or d is None:
+            continue
+        name, rhs = d.group(1), d.group(2)
+        km = _KIND_RE.search(rhs)
+        kind = km.group(1) if km else ""
+        # LHS shapes: everything before the op kind
+        lhs_txt = rhs[:km.start(1)] if km else rhs
+        out_shapes = _shapes_of(lhs_txt)
+        shapes[name] = out_shapes
+        if not km:
+            continue
+        # operand names: inside the first (...) after the kind
+        args_start = km.end()
+        depth = 1
+        i = args_start
+        while i < len(rhs) and depth:
+            if rhs[i] == "(":
+                depth += 1
+            elif rhs[i] == ")":
+                depth -= 1
+            i += 1
+        args = rhs[args_start:i - 1]
+        operands = re.findall(r"%([\w.\-]+)", args)
+        tail = rhs[i:]
+        called = _CALLED.findall(tail)
+        trip_m = _TRIP.search(tail)
+        cm = _CONTRACT.search(tail)
+        coll = None
+        for c in _COLLECTIVES:
+            if kind == c or kind.startswith(c + "-"):
+                coll = c
+                break
+        pidx = -1
+        if kind == "parameter":
+            pm = re.match(r"\s*(\d+)", args)
+            if pm:
+                pidx = int(pm.group(1))
+        cur.ops.append(OpInfo(
+            name=name, kind=kind,
+            out_bytes=sum(b for _, _, b in out_shapes),
+            operand_names=operands, called=called,
+            trip=int(trip_m.group(1)) if trip_m else 1,
+            collective=coll,
+            contract_dims=[int(x) for x in cm.group(1).split(",") if x]
+            if cm else [],
+            line_no=ln, param_idx=pidx))
+    return comps, shapes
+
+
+@dataclass
+class HloCosts:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    collectives: dict
+    n_computations: int
+
+
+_NO_HBM = {"parameter", "constant", "tuple", "get-tuple-element", "while",
+           "call", "conditional", "bitcast", "bitcast-convert",
+           "custom-call", ""}
+
+
+def analyze(text: str) -> HloCosts:
+    comps, shapes = parse_hlo(text)
+    entry = next((c for c in comps.values() if c.entry), None)
+    if entry is None and comps:
+        entry = list(comps.values())[-1]
+
+    total = {"flops": 0.0, "hbm": 0.0, "coll": 0.0}
+    coll_detail = {c: {"count": 0.0, "bytes": 0.0} for c in _COLLECTIVES}
+
+    def op_operand_bytes(op):
+        return sum(sum(b for _, _, b in shapes.get(nm, []))
+                   for nm in op.operand_names)
+
+    def fusion_traffic(op) -> float:
+        """Slice-aware HBM traffic for a fusion: an operand consumed only by
+        dynamic-slice/gather inside the body is read at slice granularity;
+        a dynamic-update-slice writes (and reads) only the update region of
+        its in-place-aliased buffer."""
+        body = comps.get(op.called[0]) if op.called else None
+        if body is None:
+            return op.out_bytes + op_operand_bytes(op)
+        param_name = {o.param_idx: o.name for o in body.ops
+                      if o.kind == "parameter"}
+        consumers: Dict[str, list] = {}
+        body_shape = {}
+        for o in body.ops:
+            body_shape[o.name] = o.out_bytes
+            for nm in o.operand_names:
+                consumers.setdefault(nm, []).append(o)
+
+        _PASSTHRU = {"convert", "bitcast", "bitcast-convert", "copy",
+                     "transpose", "reshape", "broadcast", "negate"}
+
+        def terminal_consumers(nm, depth=0):
+            """Follow elementwise/layout single chains to the ops that
+            determine how much of `nm` is actually touched."""
+            out = []
+            for c in consumers.get(nm, []):
+                if c.kind in _PASSTHRU and depth < 8:
+                    nxt = terminal_consumers(c.name, depth + 1)
+                    out.extend(nxt if nxt else [c])
+                else:
+                    out.append(c)
+            return out
+
+        traffic = 0.0
+        aliased_out = False
+        for j, operand_nm in enumerate(op.operand_names):
+            full = sum(b for _, _, b in shapes.get(operand_nm, []))
+            pname = param_name.get(j)
+            cons = terminal_consumers(pname) if pname else []
+            if cons and all(c.kind in ("dynamic-slice", "gather")
+                            for c in cons):
+                traffic += sum(c.out_bytes for c in cons)
+            elif cons and all(c.kind == "dynamic-update-slice"
+                              for c in cons):
+                # in-place: read+write only the update region (a kLoop
+                # fusion rooted at DUS computes only the updated window)
+                upd = 0.0
+                for c in cons:
+                    if len(c.operand_names) > 1:
+                        upd += body_shape.get(
+                            c.operand_names[1],
+                            sum(b for _, _, b in
+                                shapes.get(c.operand_names[1], [])))
+                traffic += 2.0 * max(upd, 1.0)
+                aliased_out = True
+            else:
+                traffic += full
+        if not aliased_out:
+            traffic += op.out_bytes
+        return traffic
+
+    def dot_flops(op) -> float:
+        if not op.operand_names:
+            return 0.0
+        lhs_shapes = shapes.get(op.operand_names[0], [])
+        if not lhs_shapes:
+            return 0.0
+        dt, lhs_dims, _ = lhs_shapes[0]
+        contract = 1
+        for ci in op.contract_dims:
+            if ci < len(lhs_dims):
+                contract *= lhs_dims[ci]
+        out_elems = op.out_bytes / _DT_BYTES.get(dt, 4)
+        return 2.0 * out_elems * contract
+
+    # Recursive per-call-path accumulation over the computation DAG: each
+    # call site contributes its own multiplier (while trips compound).
+    import sys
+    sys.setrecursionlimit(10000)
+
+    def walk(name: str, mult: float, in_fusion: bool, depth=0):
+        comp = comps.get(name)
+        if comp is None or depth > 200:
+            return
+        for op in comp.ops:
+            child_mult = mult * (op.trip if op.kind == "while" else 1)
+            if op.kind == "dot":
+                total["flops"] += dot_flops(op) * mult
+            if op.collective:
+                b = op_operand_bytes(op)
+                total["coll"] += b * mult
+                coll_detail[op.collective]["count"] += mult
+                coll_detail[op.collective]["bytes"] += b * mult
+            if not in_fusion and op.kind not in _NO_HBM:
+                if op.kind == "fusion":
+                    total["hbm"] += fusion_traffic(op) * mult
+                elif op.kind in ("dynamic-slice", "gather"):
+                    total["hbm"] += 2.0 * op.out_bytes * mult
+                elif op.kind == "dynamic-update-slice":
+                    upd = (sum(b for _, _, b in
+                               shapes.get(op.operand_names[1], []))
+                           if len(op.operand_names) > 1 else op.out_bytes)
+                    total["hbm"] += 2.0 * upd * mult
+                else:
+                    total["hbm"] += (op.out_bytes
+                                     + op_operand_bytes(op)) * mult
+            for child in op.called:
+                walk(child, child_mult, in_fusion or op.kind == "fusion",
+                     depth + 1)
+
+    if entry is not None:
+        walk(entry.name, 1.0, False)
+
+    return HloCosts(flops=total["flops"], hbm_bytes=total["hbm"],
+                    collective_bytes=total["coll"],
+                    collectives=coll_detail, n_computations=len(comps))

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state; ``dryrun.py`` sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import to materialize the placeholder devices.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = ('data', 'model'), 256 chips (TPU v5e pod).
+    Multi-pod: (2, 16, 16) = ('pod', 'data', 'model'), 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_data: int = 2, n_model: int = 2, *, pod: int = 0):
+    """Small mesh over however many (host) devices exist — used by tests."""
+    if pod:
+        return jax.make_mesh((pod, n_data, n_model),
+                             ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+HW = {
+    # TPU v5e per-chip constants for the roofline analysis
+    "peak_flops_bf16": 197e12,
+    "hbm_bw": 819e9,
+    "ici_bw_per_link": 50e9,
+    "hbm_bytes": 16e9,
+}

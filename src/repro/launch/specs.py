@@ -1,0 +1,261 @@
+"""Abstract input/parameter specs for lowering (no allocation).
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input — tokens/labels for training, the request batch + KV cache for
+serving; modality frontends are stubbed as precomputed embeddings (the
+assignment carve-out).  ``param_specs``/``param_shardings`` produce the
+weight pytree abstractly with CLEAVE-style 2-D (row x column) shardings.
+"""
+from __future__ import annotations
+
+import functools
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import model as M
+from repro.parallel.sharding import Rules
+
+ENC_FRAMES = 8192          # fixed audio-encoder length (stubbed frontend)
+
+
+def cache_len_for(cfg: ArchConfig, shape: InputShape) -> int:
+    """Ring-buffer length: the 500k decode shape uses the sliding-window
+    variant for attention-cache families (sub-quadratic requirement)."""
+    if shape.seq_len > 65536 and cfg.long_context_variant == "sliding_window":
+        return cfg.long_context_window
+    if cfg.family == "hybrid":
+        # Hymba attention is natively SWA; its SSM branch carries the rest
+        return min(shape.seq_len, cfg.long_context_window)
+    return shape.seq_len
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape,
+                rules: Optional[Rules] = None, *,
+                kv_quant: bool = False) -> dict:
+    """ShapeDtypeStructs for one step of the given input shape."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+
+    def sds(shp, dtype, *logical):
+        if rules is None or rules.mesh is None:
+            return jax.ShapeDtypeStruct(shp, dtype)
+        spec = _divisible_spec(rules, shp, logical)
+        return jax.ShapeDtypeStruct(
+            shp, dtype, sharding=NamedSharding(rules.mesh, spec))
+
+    if shape.kind == "train":
+        specs = {
+            "tokens": sds((B, S), jnp.int32, "batch", None),
+            "labels": sds((B, S), jnp.int32, "batch", None),
+        }
+        if cfg.modality == "vision":
+            svis = int(S * cfg.vision_tokens_ratio)
+            specs["vision_embeds"] = sds((B, svis, cfg.d_model), dt,
+                                         "batch", None, "embed")
+            specs["positions_mrope"] = sds((B, S, 3), jnp.int32,
+                                           "batch", None, None)
+        if cfg.enc_dec:
+            specs["encoder_feats"] = sds((B, min(2 * S, ENC_FRAMES),
+                                          cfg.d_model), dt,
+                                         "batch", None, "embed")
+        return specs
+
+    if shape.kind == "prefill":
+        specs = {"tokens": sds((B, S), jnp.int32, "batch", None)}
+        if cfg.modality == "vision":
+            svis = int(S * cfg.vision_tokens_ratio)
+            specs["vision_embeds"] = sds((B, svis, cfg.d_model), dt,
+                                         "batch", None, "embed")
+            specs["positions_mrope"] = sds((B, S, 3), jnp.int32,
+                                           "batch", None, None)
+        if cfg.enc_dec:
+            specs["encoder_feats"] = sds((B, ENC_FRAMES, cfg.d_model), dt,
+                                         "batch", None, "embed")
+        return specs
+
+    # decode: one new token against a seq_len-deep cache
+    specs = {"tokens": sds((B, 1), jnp.int32, "cache_batch", None)}
+    specs["cache"] = cache_specs(cfg, shape, rules, kv_quant=kv_quant)
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, shape: InputShape,
+                rules: Optional[Rules] = None, *,
+                kv_quant: bool = False) -> dict:
+    B = shape.global_batch
+    clen = cache_len_for(cfg, shape)
+    enc_len = ENC_FRAMES if cfg.enc_dec else 0
+    shapes = jax.eval_shape(
+        lambda: M.init_cache(cfg, B, clen, enc_len=enc_len,
+                             kv_quant=kv_quant))
+    if rules is None:
+        return shapes
+    specs = {}
+    table = {
+        "k": ("layers", "cache_batch", "cache_seq", "kv_heads", "head_dim"),
+        "v": ("layers", "cache_batch", "cache_seq", "kv_heads", "head_dim"),
+        "k_scale": ("layers", "cache_batch", "cache_seq", "kv_heads"),
+        "v_scale": ("layers", "cache_batch", "cache_seq", "kv_heads"),
+        "ckv": ("layers", "cache_batch", "cache_seq", None),
+        "kpe": ("layers", "cache_batch", "cache_seq", None),
+        "cross_k": ("layers", "cache_batch", None, "kv_heads", "head_dim"),
+        "cross_v": ("layers", "cache_batch", None, "kv_heads", "head_dim"),
+        "wkv_state": ("layers", "cache_batch", "heads", None, None),
+        "tm_prev": ("layers", "cache_batch", None),
+        "cm_prev": ("layers", "cache_batch", None),
+        "ssm_h": ("layers", "cache_batch", "ffn", None),
+        "ssm_conv": ("layers", "cache_batch", None, "ffn"),
+        "pos": (),
+    }
+    for name, sds_ in shapes.items():
+        logical = table.get(name, tuple(None for _ in sds_.shape))
+        logical = [None if l == "layers" else l for l in logical]
+        spec = _divisible_spec(rules, sds_.shape, logical)
+        specs[name] = jax.ShapeDtypeStruct(
+            sds_.shape, sds_.dtype, sharding=NamedSharding(rules.mesh, spec))
+    return specs
+
+
+def _divisible_spec(rules: Rules, shp, logical) -> P:
+    parts = []
+    used = set()
+    for dim, name in zip(shp, logical):
+        if name is None:
+            parts.append(None)
+            continue
+        sub = rules.spec(name)[0]
+        if sub is None:
+            parts.append(None)
+            continue
+        axes = (sub,) if isinstance(sub, str) else tuple(sub)
+        axes = tuple(a for a in axes if a not in used)
+        if not axes:
+            parts.append(None)
+            continue
+        n = int(np.prod([rules.mesh.shape[a] for a in axes]))
+        if dim % n != 0:
+            parts.append(None)
+            continue
+        used.update(axes)
+        parts.append(axes[0] if len(axes) == 1 else axes)
+    return P(*parts)
+
+
+def logits_sharding(cfg: ArchConfig, shape: InputShape, rules: Rules):
+    """(B, 1, padded_vocab) step-output logits: batch on the data axes,
+    vocab on 'model'."""
+    from repro.models.layers import padded_vocab
+    shp = (shape.global_batch, 1, padded_vocab(cfg))
+    spec = _divisible_spec(rules, shp, ["cache_batch", None, "vocab"])
+    return NamedSharding(rules.mesh, spec)
+
+
+# -------------------------------------------------------------- parameters --
+
+_IN_PROJ = re.compile(
+    r"(wq|wk|wv|w_gate|w_up|w_uq|w_dq|w_dkv|w_uk|w_uv|w_q|w_in|w_bc|w_dt1"
+    r"|w_r|w_k|w_g|wA)$")
+_OUT_PROJ = re.compile(r"(wo|w_down|w_out|w_o|w_v|wB|w_dt2)$")
+
+
+def _leaf_spec(path: str, shp, rules: Rules) -> P:
+    """CLEAVE 2-D weight sharding: in-projections (d -> X) put rows on
+    'data' and columns on 'model' (the PS dispatching A-rows / B-cols);
+    out-projections are the transpose."""
+    stacked = ("layers/" in path or "/cross/" in path
+               or path.startswith("cross/"))
+    lead = [None] if stacked else []
+    name = path.rsplit("/", 1)[-1]
+    core_ndim = len(shp) - len(lead)
+
+    if name == "tok":
+        spec = ["model", None]                       # vocab-sharded embed
+    elif path.endswith("head/w") or (name == "w" and "head" in path):
+        spec = [rules.table.get("w_in"), "model"]    # d -> vocab
+    elif name == "router":
+        spec = [rules.table.get("w_in"), None]
+    elif name in ("w_gate", "w_up", "w_down") and core_ndim == 3:
+        # MoE expert-stacked weights: experts -> 'model'
+        if name == "w_down":
+            spec = ["model", None, rules.table.get("w_in")]
+        else:
+            spec = ["model", rules.table.get("w_in"), None]
+    elif _IN_PROJ.search(name) and core_ndim == 2:
+        spec = [rules.table.get("w_in"), "model"]
+    elif _OUT_PROJ.search(name) and core_ndim == 2:
+        spec = ["model", rules.table.get("w_in")]
+    else:
+        spec = [None] * core_ndim
+    spec = lead + spec
+    # drop shardings that don't divide
+    parts = []
+    for dim, ax in zip(shp, spec):
+        if ax is None:
+            parts.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        axes = tuple(a for a in axes if a in rules.mesh.axis_names)
+        n = int(np.prod([rules.mesh.shape[a] for a in axes])) if axes else 1
+        parts.append(ax if (axes and dim % n == 0) else None)
+    return P(*parts)
+
+
+def param_specs(cfg: ArchConfig, rules: Optional[Rules] = None):
+    """Abstract parameter pytree with NamedShardings attached."""
+    shapes = jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    if rules is None or rules.mesh is None:
+        return shapes
+
+    def walk(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}{k}/") for k, v in tree.items()}
+        path = prefix.rstrip("/")
+        spec = _leaf_spec(path, tree.shape, rules)
+        return jax.ShapeDtypeStruct(
+            tree.shape, tree.dtype,
+            sharding=NamedSharding(rules.mesh, spec))
+
+    return walk(shapes)
+
+
+def opt_specs(param_specs_tree, rules: Optional[Rules] = None):
+    """AdamState specs: fp32 moments sharded like their weights, plus a
+    ZeRO 'pod'-axis shard on the leading dim when a pod axis exists (the
+    moments are touched only by the elementwise Adam update, so the extra
+    shard is free of hot-path gathers)."""
+    from repro.optim.adam import AdamState
+
+    mesh = rules.mesh if rules else None
+    has_pod = mesh is not None and "pod" in mesh.axis_names
+
+    def moment(sds_):
+        sh = getattr(sds_, "sharding", None)
+        if has_pod and sh is not None:
+            spec = list(sh.spec) + [None] * (len(sds_.shape) - len(sh.spec))
+            for i, (ax, dim) in enumerate(zip(spec, sds_.shape)):
+                axes = () if ax is None else (
+                    (ax,) if isinstance(ax, str) else tuple(ax))
+                if "pod" in axes:
+                    break
+                n = int(np.prod([mesh.shape[a] for a in axes])) \
+                    if axes else 1
+                if dim % (n * mesh.shape["pod"]) == 0:
+                    spec[i] = ("pod",) + axes
+                    sh = NamedSharding(mesh, P(*spec))
+                    break
+        return jax.ShapeDtypeStruct(sds_.shape, jnp.float32, sharding=sh)
+
+    mu = jax.tree.map(moment, param_specs_tree)
+    nu = jax.tree.map(moment, param_specs_tree)
+    step = jax.ShapeDtypeStruct(
+        (), jnp.int32,
+        sharding=(NamedSharding(rules.mesh, P()) if rules and rules.mesh
+                  else None))
+    return AdamState(step=step, mu=mu, nu=nu)

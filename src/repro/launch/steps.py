@@ -1,0 +1,180 @@
+"""jit-able step functions: train_step / prefill_step / serve_step factories.
+
+Each factory closes over the static config and returns a pure function over
+(params, [opt_state], batch-like) suitable for ``jax.jit`` + ``.lower()``
+with sharded abstract inputs (the dry-run path) or for real execution on CPU
+(smoke tests, examples).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.launch import specs as SP
+from repro.models import model as M
+from repro.optim import adam
+from repro.parallel.sharding import Rules, use_rules
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: Optional[adam.AdamConfig] = None,
+                    rules: Optional[Rules] = None, *, q_chunk=256,
+                    k_chunk=512, loss_chunk=256, microbatches: int = 1):
+    """With microbatches > 1, the global batch is split and gradients are
+    accumulated through a remat'd scan (activation memory / microbatches;
+    standard production grad-accumulation)."""
+    opt_cfg = opt_cfg or adam.AdamConfig()
+
+    def train_step(params, opt_state, batch):
+        with use_rules(rules):
+            def lf(p, b):
+                return M.loss_fn(cfg, p, b, q_chunk=q_chunk,
+                                 k_chunk=k_chunk, loss_chunk=loss_chunk)
+
+            if microbatches <= 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    lf, has_aux=True)(params, batch)
+            else:
+                mb_batch = jax.tree.map(
+                    lambda x: x.reshape((microbatches,
+                                         x.shape[0] // microbatches)
+                                        + x.shape[1:]),
+                    batch)
+
+                def mb_step(acc, b):
+                    (l, m), g = jax.value_and_grad(
+                        lf, has_aux=True)(params, b)
+                    acc = jax.tree.map(jnp.add, acc, (g, l))
+                    return acc, m
+
+                zero = (jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                    jnp.zeros(()))
+                (grads, loss), ms = jax.lax.scan(mb_step, zero, mb_batch)
+                grads = jax.tree.map(lambda g: g / microbatches, grads)
+                loss = loss / microbatches
+                metrics = jax.tree.map(lambda x: jnp.mean(x, axis=0), ms)
+            params2, opt2, opt_metrics = adam.apply(params, grads,
+                                                    opt_state, opt_cfg)
+            metrics = dict(metrics)
+            metrics.update(opt_metrics)
+            metrics["loss"] = loss if microbatches <= 1 else loss
+        return params2, opt2, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig, rules: Optional[Rules] = None,
+                   **chunks):
+    def eval_step(params, batch):
+        with use_rules(rules):
+            loss, metrics = M.loss_fn(cfg, params, batch, **chunks)
+        return metrics
+
+    return eval_step
+
+
+def make_prefill_step(cfg: ArchConfig, rules: Optional[Rules] = None, *,
+                      q_chunk=256, k_chunk=512):
+    def prefill_step(params, batch):
+        with use_rules(rules):
+            logits, cache = M.prefill(cfg, params, batch,
+                                      q_chunk=q_chunk, k_chunk=k_chunk)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, rules: Optional[Rules] = None):
+    """One-token decode against the cache (the decode_32k / long_500k
+    lowering target)."""
+
+    def serve_step(params, cache, tokens):
+        with use_rules(rules):
+            logits, cache = M.decode_step(cfg, params, cache, tokens)
+        return logits, cache
+
+    return serve_step
+
+
+def default_microbatches(cfg: ArchConfig, shape: InputShape,
+                         rules: Optional[Rules] = None) -> int:
+    """Grad-accumulation policy: keep per-microbatch activation footprint
+    roughly constant as models grow — capped so each microbatch still
+    divides over the mesh batch axes (a sub-shard microbatch makes XLA
+    replicate compute across pods: 16x flops blow-up, §Perf hillclimb B)."""
+    n = cfg.n_params()
+    if n > 150e9:
+        mb = 16
+    elif n > 50e9:
+        mb = 8
+    elif n > 20e9:
+        mb = 4
+    elif n > 10e9:
+        mb = 2
+    else:
+        mb = 1
+    if rules is not None and rules.mesh is not None:
+        import numpy as np
+        batch_axes = tuple(a for a in ("pod", "data")
+                           if a in rules.mesh.axis_names)
+        shards = int(np.prod([rules.mesh.shape[a] for a in batch_axes]))
+        mb = max(1, min(mb, shape.global_batch // shards))
+    return mb
+
+
+CHUNK_OVERRIDES = {
+    # archs whose head counts don't shard over 16 mesh columns keep their
+    # attention score chunks small (scores replicate across 'model')
+    "hymba-1.5b": dict(q_chunk=64),
+    "qwen1.5-32b": dict(q_chunk=128),
+    "phi3-medium-14b": dict(q_chunk=128),
+}
+
+
+def step_and_specs(cfg: ArchConfig, shape: InputShape,
+                   rules: Optional[Rules] = None, *,
+                   microbatches: Optional[int] = None,
+                   kv_quant: bool = False):
+    """(fn, example_args_specs, donate_argnums, out_shardings) for the
+    given input shape."""
+    chunks = CHUNK_OVERRIDES.get(cfg.name, {})
+    if shape.kind == "train":
+        mb = (default_microbatches(cfg, shape, rules)
+              if microbatches is None else microbatches)
+        fn = make_train_step(cfg, rules=rules, microbatches=mb, **chunks)
+        p = SP.param_specs(cfg, rules)
+        o = SP.opt_specs(p, rules)
+        b = SP.input_specs(cfg, shape, rules)
+        out_sh = None
+        if rules is not None and rules.mesh is not None:
+            # donated params/opt must alias: pin output shardings to inputs
+            psh = jax.tree.map(lambda s: s.sharding, p)
+            osh = jax.tree.map(lambda s: s.sharding, o)
+            out_sh = (psh, osh, None)
+        return fn, (p, o, b), (0, 1), out_sh
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg, rules=rules, **chunks)
+        p = SP.param_specs(cfg, rules)
+        b = SP.input_specs(cfg, shape, rules)
+        out_sh = None
+        if rules is not None and rules.mesh is not None:
+            # the filled cache must leave the step decode-sharded (batch on
+            # 'data', sequence on 'model'), not replicated
+            from repro.parallel.sharding import make_rules
+            drules = make_rules(rules.mesh, mode="decode")
+            cache_sh = jax.tree.map(
+                lambda s: s.sharding, SP.cache_specs(cfg, shape, drules))
+            out_sh = (SP.logits_sharding(cfg, shape, drules), cache_sh)
+        return fn, (p, b), (), out_sh
+    fn = make_serve_step(cfg, rules=rules)
+    p = SP.param_specs(cfg, rules)
+    ins = SP.input_specs(cfg, shape, rules, kv_quant=kv_quant)
+    out_sh = None
+    if rules is not None and rules.mesh is not None:
+        cache_sh = jax.tree.map(lambda s: s.sharding, ins["cache"])
+        out_sh = (SP.logits_sharding(cfg, shape, rules), cache_sh)
+    return fn, (p, ins["cache"], ins["tokens"]), (1,), out_sh

@@ -1,0 +1,136 @@
+"""End-to-end training driver.
+
+CPU-scale real training (examples/train_e2e.py uses this) and the
+production-mesh entry point.  Wires the synthetic data pipeline, the model
+zoo, AdamW, periodic checkpointing, and (when devices allow) the production
+mesh + CLEAVE 2-D shardings.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --reduced \
+      --steps 100 --batch 8 --seq 128 [--ckpt-dir ckpts]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the smoke-scale variant (CPU-friendly)")
+    ap.add_argument("--layers", type=int, default=None)
+    ap.add_argument("--d-model", type=int, default=None)
+    ap.add_argument("--vocab", type=int, default=None)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--mesh", default=None, help="e.g. 2x2 (host devices)")
+    ap.add_argument("--metrics-out", default=None)
+    args = ap.parse_args(argv)
+
+    import jax
+    from repro.configs.base import get_config
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.launch.steps import make_train_step
+    from repro.models import model as M
+    from repro.optim import adam
+    from repro.parallel.sharding import make_rules
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    over = {}
+    if args.layers:
+        over["n_layers"] = args.layers
+    if args.d_model:
+        over["d_model"] = args.d_model
+        over["d_ff"] = 4 * args.d_model
+    if args.vocab:
+        over["vocab_size"] = args.vocab
+    if over:
+        cfg = dataclasses.replace(cfg, **over)
+
+    rules = None
+    if args.mesh:
+        dims = tuple(int(x) for x in args.mesh.split("x"))
+        mesh = jax.make_mesh(dims, ("data", "model")[-len(dims):])
+        rules = make_rules(mesh, mode="train")
+
+    opt_cfg = adam.AdamConfig(lr=args.lr, warmup_steps=min(20, args.steps),
+                              total_steps=args.steps)
+    key = jax.random.PRNGKey(args.seed)
+    params = M.init_params(cfg, key)
+    opt_state = adam.init(params, opt_cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params:,} vocab={cfg.vocab_size} "
+          f"layers={cfg.n_layers} d={cfg.d_model}")
+
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                  seq_len=args.seq,
+                                  global_batch=args.batch,
+                                  seed=args.seed))
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, rules=rules,
+                                      q_chunk=64, k_chunk=64,
+                                      loss_chunk=64),
+                      donate_argnums=(0, 1))
+
+    mgr = None
+    if args.ckpt_dir:
+        from repro.checkpointing.checkpoint import CheckpointManager
+        mgr = CheckpointManager(args.ckpt_dir, every=args.ckpt_every)
+
+    history = []
+    t0 = time.perf_counter()
+    for step in range(args.steps):
+        batch = {k: jax.numpy.asarray(v)
+                 for k, v in data.batch(step).items()}
+        if cfg.modality == "vision":
+            rngv = np.random.default_rng((args.seed, step, 7))
+            svis = max(args.seq // 4, 1)
+            batch["vision_embeds"] = jax.numpy.asarray(
+                rngv.standard_normal((args.batch, svis, cfg.d_model)),
+                dtype=cfg.dtype)
+        if cfg.enc_dec:
+            rnga = np.random.default_rng((args.seed, step, 11))
+            batch["encoder_feats"] = jax.numpy.asarray(
+                rnga.standard_normal((args.batch, 2 * args.seq,
+                                      cfg.d_model)), dtype=cfg.dtype)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        history.append({"step": step, "loss": loss,
+                        "grad_norm": float(metrics["grad_norm"]),
+                        "lr": float(metrics["lr"])})
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = time.perf_counter() - t0
+            print(f"step {step:5d} loss {loss:8.4f} "
+                  f"gnorm {float(metrics['grad_norm']):8.3f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"({dt / (step + 1):.2f}s/step)")
+        if mgr is not None:
+            mgr.maybe_save(step, {"params": params, "opt": opt_state},
+                           {"loss": loss})
+        assert np.isfinite(loss), f"loss diverged at step {step}"
+
+    first = np.mean([h["loss"] for h in history[:5]])
+    last = np.mean([h["loss"] for h in history[-5:]])
+    print(f"loss: first5={first:.4f} last5={last:.4f} "
+          f"improved={first - last:.4f}")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(history, f)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,175 @@
+"""Shared layer primitives: norms, rotary embeddings (incl. M-RoPE), SwiGLU,
+embeddings, init helpers.  Pure-functional: params are nested dicts of
+jnp arrays; every `init_*` returns params, every `apply` is stateless.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import constrain
+
+
+def dtype_of(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype_of(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def padded_vocab(cfg) -> int:
+    """Pad vocab to a multiple of 256 so the vocab dim shards over any mesh."""
+    return int(np.ceil(cfg.vocab_size / 256) * 256)
+
+
+# ------------------------------------------------------------------- inits --
+
+def dense_init(key, fan_in, fan_out, dtype, scale=1.0):
+    std = scale / np.sqrt(fan_in)
+    return (jax.random.normal(key, (fan_in, fan_out)) * std).astype(dtype)
+
+
+def embed_init(key, vocab, d, dtype):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ------------------------------------------------------------------- norms --
+
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def init_groupnorm(n_groups, d, dtype):
+    del n_groups  # static; passed to `groupnorm` at apply time
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def groupnorm(params, x, groups, eps=1e-5):
+    """GroupNorm over the last dim split into `groups` groups (RWKV head-wise
+    ln_x).  x: (..., d)."""
+    g = groups
+    d = x.shape[-1]
+    xg = x.astype(jnp.float32).reshape(x.shape[:-1] + (g, d // g))
+    mu = jnp.mean(xg, axis=-1, keepdims=True)
+    var = jnp.var(xg, axis=-1, keepdims=True)
+    y = ((xg - mu) * jax.lax.rsqrt(var + eps)).reshape(x.shape)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# -------------------------------------------------------------------- RoPE --
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(half, dtype=np.float64) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B,S,H,D), positions: (B,S) int32 -> rotated x (rotate-half)."""
+    half = x.shape[-1] // 2
+    freqs = jnp.asarray(rope_freqs(x.shape[-1], theta), jnp.float32)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_m_rope(x, positions, theta: float, sections):
+    """Multimodal RoPE (Qwen2-VL): positions (B,S,3) = (t, h, w) indices,
+    `sections` are half-dim section sizes summing to head_dim // 2."""
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = jnp.asarray(rope_freqs(x.shape[-1], theta), jnp.float32)
+    # section id of each frequency index
+    sec_id = np.concatenate([np.full(s, i) for i, s in enumerate(sections)])
+    pos = positions.astype(jnp.float32)           # (B,S,3)
+    pos_per_freq = pos[..., jnp.asarray(sec_id)]  # (B,S,half)
+    ang = pos_per_freq * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def default_m_positions(batch, seq):
+    """Text-only fallback M-RoPE positions: t=h=w=linear position."""
+    p = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None, :, None],
+                         (batch, seq, 3))
+    return p
+
+
+# ------------------------------------------------------------------ SwiGLU --
+
+def init_swiglu(key, d, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, d_ff, dtype),
+        "w_up": dense_init(k2, d, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d, dtype),
+    }
+
+
+def swiglu(params, x):
+    x = constrain(x, "batch", "seq", "embed_use")
+    g = x @ constrain(params["w_gate"], "w_in_use", "w_out")
+    u = x @ constrain(params["w_up"], "w_in_use", "w_out")
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = constrain(h, "batch", "seq", "ffn")
+    return constrain(h @ constrain(params["w_down"], "w_out", "w_in_use"),
+                     "batch", "seq", "embed")
+
+
+# -------------------------------------------------------------- embeddings --
+
+def init_embedding(key, cfg):
+    v = padded_vocab(cfg)
+    p = {"tok": embed_init(key, v, cfg.d_model, pdtype_of(cfg))}
+    return p
+
+
+def embed_tokens(params, tokens, cfg):
+    e = constrain(params["tok"], "vocab", "embed")
+    x = jnp.take(e, tokens, axis=0).astype(dtype_of(cfg))
+    return constrain(x, "batch", "seq", "embed")
+
+
+def init_lm_head(key, cfg):
+    if cfg.tie_embeddings:
+        return {}
+    return {"w": dense_init(key, cfg.d_model, padded_vocab(cfg), pdtype_of(cfg))}
+
+
+def lm_logits(head_params, embed_params, x, cfg):
+    if cfg.tie_embeddings:
+        w = embed_params["tok"].T
+    else:
+        w = head_params["w"]
+    # vocab must win the 'model' axis here (not the contraction dim), or
+    # the per-chunk logits materialize at full vocab width
+    w = constrain(w, "w_in_use", "vocab")
+    return constrain(x @ w, "batch", "seq", "vocab")

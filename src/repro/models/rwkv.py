@@ -1,0 +1,172 @@
+"""RWKV-6 "Finch": time-mix with data-dependent per-channel decay (the
+Finch signature) + channel-mix.  Attention-free; decode state is O(1).
+
+Recurrence per head (hd x hd state S):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+Training uses a chunked formulation: within a chunk of length c we build
+cumulative decay products and run the intra-chunk part as dense matmuls,
+carrying only the chunk-boundary state (memory O(c^2 + hd^2) per head, not
+O(S * hd^2)).  The same math backs the Pallas kernel in
+``repro.kernels.wkv6`` (ref oracle: ``repro.kernels.ref.wkv6_ref``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.parallel.sharding import constrain
+
+
+def init_time_mix(cfg, key):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    dt = L.pdtype_of(cfg)
+    ks = jax.random.split(key, 10)
+    lora = max(16, d // 64)
+    return {
+        # token-shift interpolation weights (static mu per stream)
+        "mu": (jax.random.uniform(ks[0], (5, d)) * 0.5 + 0.25).astype(dt),
+        "w_r": L.dense_init(ks[1], d, d, dt),
+        "w_k": L.dense_init(ks[2], d, d, dt),
+        "w_v": L.dense_init(ks[3], d, d, dt),
+        "w_g": L.dense_init(ks[4], d, d, dt),
+        # data-dependent decay (lora): w_t = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "wA": L.dense_init(ks[5], d, lora, dt),
+        "wB": (jax.random.normal(ks[6], (lora, d)) * 0.01).astype(dt),
+        "u": (jax.random.normal(ks[7], (H, hd)) * 0.1).astype(jnp.float32),
+        "w_o": L.dense_init(ks[8], d, d, dt),
+        "ln_x": L.init_groupnorm(H, d, dt),
+    }
+
+
+def init_channel_mix(cfg, key):
+    d, ff = cfg.d_model, cfg.d_ff
+    dt = L.pdtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "mu": (jax.random.uniform(ks[0], (2, d)) * 0.5 + 0.25).astype(dt),
+        "w_k": L.dense_init(ks[1], d, ff, dt),
+        "w_v": L.dense_init(ks[2], ff, d, dt),
+        "w_r": L.dense_init(ks[3], d, d, dt),
+    }
+
+
+def _token_shift(x, prev):
+    """prev: (B,d) last token of previous step/segment (zeros at start)."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def wkv_chunked(r, k, v, w, u, s0, chunk=32):
+    """Chunked WKV-6. r,k,v: (B,S,H,hd); w: (B,S,H,hd) decay in (0,1);
+    u: (H,hd); s0: (B,H,hd,hd). Returns (y (B,S,H,hd), s_last).
+
+    Within a chunk (positions 0..c-1, incoming state S_in):
+      logw cumulative: W_t = prod_{i<=t} w_i  (inclusive)
+      y_t  = r_t^T [ D_{t-1} ⊙ S_in + sum_{j<t} (W_{t-1}/W_j ⊙ k_j) v_j^T ]
+             + (r_t · (u ⊙ k_t)) v_t
+      where D_{t-1} = W_{t-1} (decay from chunk start), W_{-1} = 1.
+    All in f32 for stability; decays applied in log space.
+    """
+    B, S, H, hd = r.shape
+    c = chunk if (S % chunk == 0 and S >= chunk) else S
+    nc = S // c
+    f32 = jnp.float32
+    r_, k_, v_ = (a.astype(f32).reshape(B, nc, c, H, hd).swapaxes(0, 1)
+                  for a in (r, k, v))
+    logw = jnp.log(jnp.maximum(w.astype(f32), 1e-12))
+    logw = logw.reshape(B, nc, c, H, hd).swapaxes(0, 1)
+
+    tri_lt = jnp.tril(jnp.ones((c, c), f32), k=-1)     # strictly lower: j < t
+    eye = jnp.eye(c, dtype=f32)
+
+    def chunk_step(s, inp):
+        rc, kc, vc, lwc = inp                           # (B,c,H,hd)
+        cum = jnp.cumsum(lwc, axis=1)                   # W_t (inclusive)
+        Wprev = jnp.concatenate(
+            [jnp.zeros((B, 1, H, hd), f32), cum[:, :-1]], axis=1)  # W_{t-1}
+        # inter-chunk: r_t ⊙ W_{t-1} against carried state
+        rW = rc * jnp.exp(Wprev)
+        y_inter = jnp.einsum("bthd,bhde->bthe", rW, s)
+        # intra-chunk: A[t,j] = sum_d r_t[d] k_j[d] exp(W_{t-1}[d]-W_j[d]), j<t
+        #   + diagonal u-bonus at j == t.  The pairwise exponent
+        #   W_{t-1}-W_j = sum_{i=j+1..t-1} logw_i is <= 0 wherever j < t, so
+        #   exponentiating the masked difference directly is overflow-safe
+        #   (unlike the factored exp(W_{t-1})*exp(-W_j) form).
+        diff = Wprev[:, :, None] - cum[:, None, :]      # (B,t,j,H,hd)
+        diff = jnp.where(tri_lt[None, :, :, None, None] > 0, diff, -jnp.inf)
+        A = jnp.einsum("bthd,bjhd,btjhd->bhtj", rc, kc, jnp.exp(diff))
+        A_diag = jnp.einsum("bthd,bthd->bht", rc, u[None, None] * kc)
+        A = A + A_diag[..., None] * eye[None, None]
+        y = y_inter + jnp.einsum("bhtj,bjhd->bthd", A, vc)
+        # carry state to next chunk: S' = diag(W_c) S + sum_j (W_c/W_j ⊙ k_j) v_j^T
+        Wc = cum[:, -1]                                 # (B,H,hd)
+        kdec = kc * jnp.exp(Wc[:, None] - cum)          # (B,c,H,hd)
+        s_new = s * jnp.exp(Wc)[..., None] \
+            + jnp.einsum("bjhd,bjhe->bhde", kdec, vc)
+        return s_new, y
+
+    # remat each chunk: backward recomputes the intra-chunk decay tensors
+    # instead of saving O(n_chunks · c · c · hd) residuals
+    s_last, ys = jax.lax.scan(
+        jax.checkpoint(chunk_step), s0.astype(f32), (r_, k_, v_, logw))
+    y = ys.swapaxes(0, 1).reshape(B, S, H, hd)
+    return y, s_last
+
+
+def _tm_streams(p, x, shifted):
+    """Interpolate the 5 time-mix input streams (r,k,v,g,w)."""
+    mu = p["mu"].astype(jnp.float32)
+    xf, sf = x.astype(jnp.float32), shifted.astype(jnp.float32)
+    outs = [xf + (sf - xf) * mu[i] for i in range(5)]
+    return [o.astype(x.dtype) for o in outs]
+
+
+def time_mix(cfg, p, x, prev_token, s0, chunk=32):
+    """x: (B,S,d); prev_token: (B,d); s0: (B,H,hd,hd).
+    Returns (out, last_token, s_last)."""
+    B, S, d = x.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    shifted = _token_shift(x, prev_token)
+    xr, xk, xv, xg, xw = _tm_streams(p, x, shifted)
+    r = (xr @ constrain(p["w_r"], "w_in_use", "w_out")).reshape(B, S, H, hd)
+    k = (xk @ constrain(p["w_k"], "w_in_use", "w_out")).reshape(B, S, H, hd)
+    v = (xv @ constrain(p["w_v"], "w_in_use", "w_out")).reshape(B, S, H, hd)
+    g = jax.nn.silu((xg @ constrain(p["w_g"], "w_in_use", "w_out"))
+                    .astype(jnp.float32))
+    g = constrain(g, "batch", "seq", "ffn")
+    # Finch data-dependent decay
+    ww = (p["w0"] + jnp.tanh(xw.astype(jnp.float32) @ p["wA"].astype(jnp.float32))
+          @ p["wB"].astype(jnp.float32))
+    ww = constrain(ww, "batch", "seq", "ffn")
+    w = jnp.exp(-jnp.exp(ww)).reshape(B, S, H, hd)      # in (0,1)
+    w = constrain(w, "batch", "seq", "heads", "head_dim")
+    r = constrain(r, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, "batch", "seq", "heads", "head_dim")
+    v = constrain(v, "batch", "seq", "heads", "head_dim")
+    y, s_last = wkv_chunked(r, k, v, w, p["u"], s0, chunk)
+    y = L.groupnorm(p["ln_x"], y.reshape(B, S, d), H, cfg.norm_eps)
+    y = (y.astype(jnp.float32) * g).astype(x.dtype)
+    out = constrain(y @ constrain(p["w_o"], "w_out", "w_in_use"),
+                    "batch", "seq", "embed")
+    return out, x[:, -1], s_last
+
+
+def channel_mix(cfg, p, x, prev_token):
+    shifted = _token_shift(x, prev_token)
+    mu = p["mu"].astype(jnp.float32)
+    xf, sf = x.astype(jnp.float32), shifted.astype(jnp.float32)
+    xk = (xf + (sf - xf) * mu[0]).astype(x.dtype)
+    xr = (xf + (sf - xf) * mu[1]).astype(x.dtype)
+    k = jnp.square(jax.nn.relu(
+        (xk @ constrain(p["w_k"], "w_in_use", "w_out")).astype(jnp.float32)))
+    k = constrain(k.astype(x.dtype), "batch", "seq", "ffn")
+    v = k @ constrain(p["w_v"], "w_out", "w_in_use")
+    rgate = jax.nn.sigmoid(
+        (xr @ p["w_r"]).astype(jnp.float32)).astype(x.dtype)
+    return constrain(v * rgate, "batch", "seq", "embed"), x[:, -1]

@@ -1,0 +1,149 @@
+"""Mamba-style selective SSM (Hymba's SSM branch).
+
+Recurrence: h_t = exp(-softplus(dt_t) * A) * h_{t-1} + dt_t * B_t * x_t,
+y_t = C_t . h_t + D * x_t, with per-channel state size N.  Training uses a
+chunked associative scan (memory O(chunk * d_inner * N) instead of
+O(S * d_inner * N)); decode carries (h, conv window) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.parallel.sharding import constrain
+
+
+def init_ssm(cfg, key):
+    d, di, N, K = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    dt = L.pdtype_of(cfg)
+    ks = jax.random.split(key, 8)
+    dt_rank = max(1, d // 16)
+    return {
+        "w_in": L.dense_init(ks[0], d, 2 * di, dt),
+        "conv": (jax.random.normal(ks[1], (K, di)) / np.sqrt(K)).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "w_bc": L.dense_init(ks[2], di, 2 * N, dt),
+        "w_dt1": L.dense_init(ks[3], di, dt_rank, dt),
+        "w_dt2": L.dense_init(ks[4], dt_rank, di, dt),
+        "dt_bias": jnp.full((di,), -4.6, dt),   # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=jnp.float32), (di, N)).copy()),
+        "D": jnp.ones((di,), jnp.float32),
+        "w_out": L.dense_init(ks[5], di, d, dt),
+    }
+
+
+def _conv1d(p, u, conv_state=None):
+    """Depthwise causal conv. u: (B,S,di). conv_state: (B,K-1,di) or None."""
+    K = p["conv"].shape[0]
+    if conv_state is None:
+        pad = jnp.zeros(u.shape[:1] + (K - 1,) + u.shape[2:], u.dtype)
+    else:
+        pad = conv_state.astype(u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)
+    out = sum(up[:, i:i + u.shape[1]] * p["conv"][i] for i in range(K))
+    new_state = up[:, -(K - 1):] if K > 1 else None
+    return out + p["conv_b"], new_state
+
+
+def _ssm_inputs(cfg, p, u):
+    """u: (B,S,di) post-conv activations -> (decay a, drive b, C)."""
+    N = cfg.ssm_state
+    bc = u @ p["w_bc"]
+    Bm, Cm = bc[..., :N], bc[..., N:]                     # (B,S,N)
+    dt_ = jax.nn.softplus(
+        ((u @ p["w_dt1"]) @ p["w_dt2"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))               # (B,S,di)
+    dt_ = constrain(dt_, "batch", "seq", "ffn")
+    A = -jnp.exp(p["A_log"])                              # (di,N), negative
+    a = jnp.exp(dt_[..., None] * A)                       # (B,S,di,N) decay
+    b = (dt_ * u.astype(jnp.float32))[..., None] \
+        * Bm.astype(jnp.float32)[..., None, :]            # (B,S,di,N)
+    a = constrain(a, "batch", "seq", "ffn", None)
+    b = constrain(b, "batch", "seq", "ffn", None)
+    return a, b, Cm.astype(jnp.float32)
+
+
+def ssm_scan_chunked(a, b, h0, chunk: int, Cm=None):
+    """Linear recurrence h_t = a_t*h_{t-1} + b_t via chunked associative
+    scan.  a,b: (B,S,di,N); h0: (B,di,N).
+
+    With ``Cm`` (B,S,N) given, contracts the state against C *inside each
+    chunk* and returns (y (B,S,di), h_last) — the (B,S,di,N) trajectory
+    never materializes (N× smaller scan output; §Perf memory iteration).
+    Otherwise returns (h_all (B,S,di,N), h_last)."""
+    B, S, di, N = a.shape
+    c = chunk if (S % chunk == 0 and S >= chunk) else S
+    nc = S // c
+    ar = a.reshape(B, nc, c, di, N).swapaxes(0, 1)
+    br = b.reshape(B, nc, c, di, N).swapaxes(0, 1)
+    cr = (Cm.reshape(B, nc, c, N).swapaxes(0, 1)
+          if Cm is not None else None)
+
+    def chunk_step(h, inp):
+        if cr is not None:
+            ac, bc_, cc = inp
+        else:
+            (ac, bc_), cc = inp, None
+        # prepend carry as a pseudo-step: h_{-1} contribution
+        bc0 = bc_.at[:, 0].add(ac[:, 0] * h)
+
+        def combine(l, r):
+            al, bl = l
+            ar_, br_ = r
+            return al * ar_, bl * ar_ + br_
+        _, hs = jax.lax.associative_scan(combine, (ac, bc0), axis=1)
+        if cc is not None:
+            return hs[:, -1], jnp.einsum("bcdn,bcn->bcd", hs, cc)
+        return hs[:, -1], hs
+
+    xs = (ar, br, cr) if cr is not None else (ar, br)
+    h_last, ys = jax.lax.scan(jax.checkpoint(chunk_step), h0, xs)
+    if cr is not None:
+        return ys.swapaxes(0, 1).reshape(B, S, di), h_last
+    h_all = ys.swapaxes(0, 1).reshape(B, S, di, N)
+    return h_all, h_last
+
+
+def ssm_block(cfg, p, x, chunk=64):
+    """Training/prefill. x: (B,S,d) -> (B,S,d)."""
+    B, S, d = x.shape
+    di, N = cfg.d_inner, cfg.ssm_state
+    xz = x @ constrain(p["w_in"], "w_in_use", "w_out")
+    u, z = jnp.split(xz, 2, axis=-1)
+    u, _ = _conv1d(p, u)
+    u = jax.nn.silu(u.astype(jnp.float32)).astype(x.dtype)
+    u = constrain(u, "batch", "seq", "ffn")
+    a, b, Cm = _ssm_inputs(cfg, p, u)
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    y, _ = ssm_scan_chunked(a, b, h0, chunk, Cm=Cm)
+    y = constrain(y, "batch", "seq", "ffn")
+    y = y + p["D"] * u.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = constrain(y, "batch", "seq", "ffn")
+    return constrain(y @ constrain(p["w_out"], "w_out", "w_in_use"),
+                     "batch", "seq", "embed")
+
+
+def ssm_decode(cfg, p, x, h, conv_state):
+    """One-step decode. x: (B,1,d); h: (B,di,N); conv_state: (B,K-1,di)."""
+    B = x.shape[0]
+    xz = x @ p["w_in"]
+    u, z = jnp.split(xz, 2, axis=-1)
+    u, conv_state = _conv1d(p, u, conv_state)
+    u = jax.nn.silu(u.astype(jnp.float32)).astype(x.dtype)
+    a, b, Cm = _ssm_inputs(cfg, p, u)
+    h = a[:, 0] * h + b[:, 0]
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])[:, None]
+    y = y + p["D"] * u.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ p["w_out"], h, conv_state
+
+
+def init_ssm_cache(cfg, batch, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+    }

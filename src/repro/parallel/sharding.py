@@ -1,0 +1,167 @@
+"""Logical-axis sharding rules.
+
+Model code annotates tensors with *logical* axis names
+(``constrain(x, "batch", "seq", "embed")``); a :class:`Rules` table maps
+logical names to mesh axes. Outside a mesh context everything is a no-op, so
+smoke tests and the CPU executor run unchanged.
+
+The CLEAVE mapping (DESIGN.md §2): weights carry 2-D row×column sharding
+(``embed→'data'``-rows, ``ffn/heads/vocab→'model'``-cols) in training mode —
+the TPU analog of the PS dispatching A-rows and B-cols — while activations
+keep tokens on ``'data'`` and the residual feature dim on ``'model'``.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _axes_in_mesh(mesh: Mesh) -> set:
+    return set(mesh.axis_names)
+
+
+@dataclass(frozen=True)
+class Rules:
+    """Maps logical axis name -> mesh axis (str, tuple of str, or None)."""
+    table: dict = field(default_factory=dict)
+    mesh: Optional[Mesh] = None
+
+    def spec(self, *logical) -> P:
+        parts, used = [], set()
+        for name in logical:
+            ax = self.table.get(name)
+            if ax is None:
+                parts.append(None)
+                continue
+            if isinstance(ax, str):
+                ax = (ax,)
+            ax = tuple(a for a in ax
+                       if self.mesh is None or a in _axes_in_mesh(self.mesh))
+            ax = tuple(a for a in ax if a not in used)
+            used.update(ax)
+            if not ax:
+                parts.append(None)
+            elif len(ax) == 1:
+                parts.append(ax[0])
+            else:
+                parts.append(ax)
+        return P(*parts)
+
+    def sharding(self, *logical) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+    def divisible(self, dim_size: int, *logical_one) -> bool:
+        """True if `dim_size` divides evenly over the mesh axes mapped to a
+        single logical name (used to drop shardings that don't divide)."""
+        if self.mesh is None:
+            return True
+        spec = self.spec(*logical_one)
+        ax = spec[0]
+        if ax is None:
+            return True
+        if isinstance(ax, str):
+            ax = (ax,)
+        n = 1
+        for a in ax:
+            n *= self.mesh.shape[a]
+        return dim_size % n == 0
+
+
+# ------------------------------------------------------------------ context --
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules]):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def current_rules() -> Optional[Rules]:
+    return getattr(_state, "rules", None)
+
+
+def constrain(x, *logical):
+    """Apply with_sharding_constraint per the active rules (no-op without).
+
+    Uneven dims are allowed when dim >= n_shards (GSPMD pads internally,
+    <=2x overhead — e.g. 40 attention heads over 16 mesh columns); shardings
+    are dropped only when the dim is smaller than the shard count."""
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return x
+    parts = []
+    spec = rules.spec(*logical)
+    for dim, ax in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+        if ax is None:
+            parts.append(None)
+            continue
+        axs = (ax,) if isinstance(ax, str) else tuple(ax)
+        n = 1
+        for a in axs:
+            n *= rules.mesh.shape[a]
+        parts.append(ax if dim >= n else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, P(*parts)))
+
+
+# ------------------------------------------------------------- rule presets --
+
+def make_rules(mesh: Optional[Mesh], mode: str = "train",
+               weight_2d: Optional[bool] = None,
+               fsdp: bool = False) -> Rules:
+    """Sharding-rule presets per execution mode.
+
+    mode="train":  batch->(pod,data), weights 2-D (data x model)  [CLEAVE]
+    mode="prefill": batch->(pod,data), weights col-sharded (2-D optional)
+    mode="decode": batch->data, cache sequence->model, weights col-sharded
+                   (2-D row x column for big models — XLA inserts per-layer
+                   weight all-gathers over 'data'; memory/bandwidth trade)
+
+    fsdp=True (beyond-paper §Perf): weights are *stored* 2-D
+    (data x model) but *used* with the row shard gathered just-in-time
+    (one per-layer weight all-gather over 'data'), and activations keep the
+    feature dim unsharded inside a layer — replacing O(dots/layer) big
+    activation all-gathers with O(1) small weight gathers per layer.
+    Residual checkpoints between layers stay model-sharded.
+    """
+    if weight_2d is None:
+        weight_2d = mode == "train"
+    batch_axes = ("pod", "data") if (mesh is not None and "pod" in mesh.axis_names) else ("data",)
+    # weights row-shard over 'data' only: extending to 'pod' makes XLA
+    # replicate contraction compute across pods (measured 16x flops blow-up,
+    # §Perf hillclimb B iteration 1 — refuted); the pod axis instead shards
+    # optimizer moments (ZeRO, see specs.opt_specs).
+    w_in = ("data" if weight_2d else None)
+    t = {
+        "batch": batch_axes,
+        "seq": None,
+        "embed": "model" if mode == "train" else None,   # residual feature dim
+        "embed_use": (None if fsdp else
+                      ("model" if mode == "train" else None)),
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "ffn": "model",
+        "vocab": "model",
+        "experts": "model",
+        "w_in": w_in,
+        "w_in_use": (None if fsdp else w_in),
+        "w_out": "model",
+        "cache_seq": "model" if mode == "decode" else None,
+        "cache_batch": batch_axes,
+        "state": None,
+        "opt": ("pod", "data"),    # ZeRO: optimizer-state extra shard axis
+    }
+    return Rules(table=t, mesh=mesh)

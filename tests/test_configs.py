@@ -1,0 +1,85 @@
+"""Config registry: all 10 assigned archs + paper models resolve, with the
+exact dims from the assignment, and reduced variants obey the smoke limits."""
+import pytest
+
+from repro.configs.base import INPUT_SHAPES, get_config, list_configs
+
+ASSIGNED = {
+    "qwen1.5-32b": dict(n_layers=64, d_model=5120, n_heads=40,
+                        n_kv_heads=40, d_ff=27392, vocab_size=152064,
+                        family="dense"),
+    "hymba-1.5b": dict(n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5,
+                       d_ff=5504, vocab_size=32001, family="hybrid"),
+    "phi3-medium-14b": dict(n_layers=40, d_model=5120, n_heads=40,
+                            n_kv_heads=10, d_ff=17920, vocab_size=100352,
+                            family="dense"),
+    "deepseek-v2-236b": dict(n_layers=60, d_model=5120, n_heads=128,
+                             vocab_size=102400, family="moe",
+                             n_experts=160, moe_top_k=6, moe_d_ff=1536,
+                             n_shared_experts=2, kv_lora_rank=512),
+    "qwen2-vl-72b": dict(n_layers=80, d_model=8192, n_heads=64,
+                         n_kv_heads=8, d_ff=29568, vocab_size=152064,
+                         family="vlm"),
+    "llama3-8b": dict(n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+                      d_ff=14336, vocab_size=128256, family="dense"),
+    "qwen3-32b": dict(n_layers=64, d_model=5120, n_heads=64, n_kv_heads=8,
+                      d_ff=25600, vocab_size=151936, family="dense"),
+    "seamless-m4t-medium": dict(n_layers=12, d_model=1024, n_heads=16,
+                                n_kv_heads=16, d_ff=4096,
+                                vocab_size=256206, family="audio"),
+    "rwkv6-7b": dict(n_layers=32, d_model=4096, d_ff=14336,
+                     vocab_size=65536, family="ssm"),
+    "granite-moe-1b-a400m": dict(n_layers=24, d_model=1024, n_heads=16,
+                                 n_kv_heads=8, vocab_size=49155,
+                                 family="moe", n_experts=32, moe_top_k=8,
+                                 moe_d_ff=512),
+}
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED))
+def test_assigned_dims(name):
+    cfg = get_config(name)
+    for field, want in ASSIGNED[name].items():
+        assert getattr(cfg, field) == want, (name, field)
+
+
+def test_all_registered():
+    names = list_configs()
+    for a in ASSIGNED:
+        assert a in names
+    for paper in ("opt-13b", "llama2-13b", "llama2-70b"):
+        assert paper in names
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED))
+def test_reduced_limits(name):
+    r = get_config(name).reduced()
+    assert r.n_layers <= 2
+    assert r.d_model <= 512
+    if r.moe:
+        assert r.n_experts <= 4
+    assert r.family == get_config(name).family
+
+
+def test_param_counts_scale():
+    """Analytic counts land in the advertised ballpark."""
+    approx = {"llama3-8b": 8e9, "phi3-medium-14b": 14e9,
+              "qwen3-32b": 32e9, "qwen2-vl-72b": 72e9,
+              "deepseek-v2-236b": 236e9, "rwkv6-7b": 7e9,
+              "hymba-1.5b": 1.5e9, "granite-moe-1b-a400m": 1.3e9}
+    for name, want in approx.items():
+        n = get_config(name).n_params()
+        assert 0.5 * want < n < 1.7 * want, (name, n, want)
+
+
+def test_moe_active_params():
+    cfg = get_config("deepseek-v2-236b")
+    assert cfg.active_params() < 0.2 * cfg.n_params()
+
+
+def test_input_shapes():
+    assert INPUT_SHAPES["train_4k"].seq_len == 4096
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].global_batch == 32
+    assert INPUT_SHAPES["decode_32k"].kind == "decode"
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288

@@ -1,0 +1,129 @@
+"""CLEAVE cost-model invariants (§4.1) — unit + hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model as cm
+from repro.sim.devices import median_fleet, sample_fleet
+
+
+def _fleet(n, seed=0):
+    return sample_fleet(n, np.random.default_rng(seed))
+
+
+def test_coverage_exact():
+    g = cm.GEMM(m=512, n=1024, q=768)
+    plan = cm.solve_gemm(g, _fleet(16))
+    area = sum(a.alpha * a.beta for a in plan.assignments)
+    assert area == g.m * g.q
+
+
+def test_no_overlap():
+    g = cm.GEMM(m=256, n=512, q=384)
+    plan = cm.solve_gemm(g, _fleet(12))
+    grid = np.zeros((g.m, g.q), int)
+    for a in plan.assignments:
+        grid[a.r0:a.r1, a.c0:a.c1] += 1
+    assert (grid == 1).all()
+
+
+def test_makespan_at_least_lower_bound():
+    g = cm.GEMM(m=1024, n=2048, q=1024)
+    devs = _fleet(32)
+    plan = cm.solve_gemm(g, devs)
+    assert plan.makespan >= plan.lower_bound * 0.999
+
+
+def test_homogeneous_near_optimal_compute_bound():
+    """Compute-bound GEMM on a homogeneous fleet: realized makespan within
+    2x of the Eq. 18 lower bound (Appendix B (1+eps) claim, integer gap)."""
+    devs = [cm.Device(flops=1e12, dl_bw=1e12, ul_bw=1e12, dl_lat=0.0,
+                      ul_lat=0.0, memory=1e18, device_id=i)
+            for i in range(16)]
+    g = cm.GEMM(m=2048, n=4096, q=2048)
+    plan = cm.solve_gemm(g, devs)
+    assert plan.lower_bound <= plan.makespan <= 2.0 * plan.lower_bound
+
+
+def test_straggler_exclusion():
+    """Eq. 6: a device whose fixed latency exceeds the makespan stays idle."""
+    devs = [cm.Device(flops=1e13, dl_bw=1e8, ul_bw=1e7, dl_lat=0.01,
+                      ul_lat=0.01, memory=1e9, device_id=i)
+            for i in range(8)]
+    devs.append(cm.Device(flops=1e9, dl_bw=1e3, ul_bw=1e3, dl_lat=1e4,
+                          ul_lat=1e4, memory=1e9, device_id=99))
+    g = cm.GEMM(m=512, n=1024, q=512)
+    plan = cm.solve_gemm(g, devs)
+    assert 99 in plan.excluded
+    assert all(a.device_id != 99 for a in plan.assignments)
+
+
+def test_memory_constraint_respected():
+    g = cm.GEMM(m=2048, n=4096, q=2048)
+    devs = _fleet(64)
+    plan = cm.solve_gemm(g, devs)
+    mem = {d.device_id: d.memory for d in devs}
+    for a in plan.assignments:
+        need = ((a.alpha + a.beta) * g.n + a.alpha * a.beta) * g.b
+        # largest-remainder rounding can add one row/col over the continuum
+        slack = (g.n + max(g.m, g.q)) * g.b
+        assert need <= mem[a.device_id] + slack
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(64, 2048), n=st.integers(64, 8192),
+       q=st.integers(64, 2048), d=st.integers(2, 48),
+       seed=st.integers(0, 5))
+def test_property_coverage_and_bound(m, n, q, d, seed):
+    g = cm.GEMM(m=m, n=n, q=q)
+    devs = _fleet(d, seed)
+    plan = cm.solve_gemm(g, devs)
+    area = sum(a.alpha * a.beta for a in plan.assignments)
+    assert area == m * q
+    assert plan.makespan >= plan.lower_bound * 0.999
+    grid = np.zeros((m, q), np.int8) if m * q <= 1 << 22 else None
+    if grid is not None:
+        for a in plan.assignments:
+            grid[a.r0:a.r1, a.c0:a.c1] += 1
+        assert (grid == 1).all()
+
+
+def test_per_device_comm_decreases_with_scale():
+    """The paper's central claim (Fig 1): per-device communication volume
+    decreases as devices join."""
+    from repro.core.gemm_dag import build_dag
+    from repro.core.scheduler import schedule
+    from repro.configs.base import get_config
+    dag = build_dag(get_config("opt-13b"), 32, 256, attention_scores="ps")
+    comms = []
+    for n in (16, 64, 256):
+        sp = schedule(dag, median_fleet(n))
+        comms.append(sp.max_per_device_comm)
+    assert comms[0] > comms[1] > comms[2]
+
+
+def test_batched_instance_scheduling():
+    g = cm.GEMM(m=128, n=64, q=128, count=512)
+    devs = _fleet(32)
+    plan = cm.solve_batched(g, devs)
+    assert plan.instances is not None
+    assert sum(plan.instances.values()) == 512
+    assert plan.makespan > 0
+
+
+def test_n_split_fallback_for_memory_infeasible():
+    """A huge-contraction GEMM that exceeds every device's memory must split
+    the contraction dim rather than fail (PS accumulates partials)."""
+    devs = [cm.Device(flops=1e13, dl_bw=1e8, ul_bw=1e7, memory=64e6,
+                      device_id=i) for i in range(8)]
+    g = cm.GEMM(m=4096, n=131072, q=4096)
+    plan = cm.solve_gemm(g, devs)
+    assert plan.n_split > 1
+
+
+def test_optimizer_tail():
+    ps = cm.PSConfig(mem_bw=150e9, opt_bytes_per_param=26.0)
+    g = cm.GEMM(m=128 * 1024, n=5120, q=13824, layer=0)
+    t = cm.optimizer_time(g, ps)
+    # paper §6: per-layer optimizer traffic hides behind seconds-scale bwd
+    assert 0.001 < t < 0.1

@@ -1,0 +1,148 @@
+"""Serve-path correctness: step-by-step decode must match the full forward
+(teacher-forcing) logits, including ring-buffer sliding-window caches and
+prefill-then-decode handoff."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models import layers as L
+from repro.models import model as M
+
+ARCHS = ["llama3-8b", "qwen3-32b", "qwen1.5-32b", "phi3-medium-14b",
+         "rwkv6-7b", "hymba-1.5b", "qwen2-vl-72b", "seamless-m4t-medium"]
+
+
+def setup(arch, B=2, S=8, seed=0, **over):
+    cfg = get_config(arch).reduced(**over)
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(cfg, key)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.modality == "vision":
+        # decode-consistency test uses text-only stream
+        pass
+    if cfg.enc_dec:
+        batch["encoder_feats"] = jax.random.normal(key, (B, 2 * S,
+                                                         cfg.d_model))
+    return cfg, params, tokens, batch
+
+
+def full_logits(cfg, params, batch):
+    x, _, _ = M.forward(cfg, params, batch, remat=False)
+    lg = L.lm_logits(params["head"], params["embed"], x, cfg)
+    return np.asarray(lg[..., :cfg.vocab_size], np.float32)
+
+
+def run_decode(cfg, params, tokens, cache):
+    step = jax.jit(lambda p, c, t: M.decode_step(cfg, p, c, t))
+    outs = []
+    for t in range(tokens.shape[1]):
+        logits, cache = step(params, cache, tokens[:, t:t + 1])
+        outs.append(np.asarray(logits[:, 0, :cfg.vocab_size], np.float32))
+    return np.stack(outs, axis=1), cache
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    cfg, params, tokens, batch = setup(arch)
+    want = full_logits(cfg, params, batch)
+    cache = M.init_cache(cfg, 2, tokens.shape[1],
+                         enc_len=(2 * tokens.shape[1] if cfg.enc_dec else 0))
+    if cfg.enc_dec:
+        from repro.models import encdec
+        ck, cv = encdec.prepare_cross_cache(cfg, params,
+                                            batch["encoder_feats"])
+        cache["cross_k"], cache["cross_v"] = ck, cv
+    got, _ = run_decode(cfg, params, tokens, cache)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_moe_decode_matches_forward_no_drop():
+    for arch in ("deepseek-v2-236b", "granite-moe-1b-a400m"):
+        cfg, params, tokens, batch = setup(arch)
+        cfg = dataclasses.replace(cfg, capacity_factor=32.0)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        want = full_logits(cfg, params, batch)
+        cache = M.init_cache(cfg, 2, tokens.shape[1])
+        got, _ = run_decode(cfg, params, tokens, cache)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_sliding_window_ring_cache():
+    """With a ring cache of W slots, decode at pos >= W must equal full
+    attention restricted to the last W tokens."""
+    cfg, params, tokens, batch = setup("llama3-8b", S=12)
+    W = 4
+    # reference: forward with window=W
+    x, _, _ = M.forward(cfg, params, batch, window=W, remat=False)
+    want = np.asarray(
+        L.lm_logits(params["head"], params["embed"], x, cfg)
+        [..., :cfg.vocab_size], np.float32)
+    cache = M.init_cache(cfg, 2, W)   # ring buffer of W slots
+    got, _ = run_decode(cfg, params, tokens, cache)
+    # positions >= W-1 have a full window in both
+    np.testing.assert_allclose(got[:, W:], want[:, W:], rtol=1e-3,
+                               atol=1e-4)
+
+
+def test_prefill_then_decode():
+    cfg, params, tokens, batch = setup("llama3-8b", S=8)
+    want = full_logits(cfg, params, batch)
+    logits, cache = M.prefill(cfg, params, {"tokens": tokens[:, :5]})
+    np.testing.assert_allclose(
+        np.asarray(logits[:, 0, :cfg.vocab_size], np.float32),
+        want[:, 4], rtol=1e-3, atol=1e-4)
+    # cache continues: grow cache to full length first
+    full_cache = M.init_cache(cfg, 2, 8)
+    full_cache["k"] = full_cache["k"].at[:, :, :5].set(cache["k"])
+    full_cache["v"] = full_cache["v"].at[:, :, :5].set(cache["v"])
+    full_cache["pos"] = cache["pos"]
+    step = jax.jit(lambda p, c, t: M.decode_step(cfg, p, c, t))
+    outs = []
+    c = full_cache
+    for t in range(5, 8):
+        lg, c = step(params, c, tokens[:, t:t + 1])
+        outs.append(np.asarray(lg[:, 0, :cfg.vocab_size], np.float32))
+    np.testing.assert_allclose(np.stack(outs, 1), want[:, 5:8],
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_mla_prefill_then_decode():
+    cfg, params, tokens, batch = setup("deepseek-v2-236b", S=8)
+    cfg = dataclasses.replace(cfg, capacity_factor=32.0)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    want = full_logits(cfg, params, batch)
+    logits, cache = M.prefill(cfg, params, {"tokens": tokens})
+    np.testing.assert_allclose(
+        np.asarray(logits[:, 0, :cfg.vocab_size], np.float32),
+        want[:, -1], rtol=1e-3, atol=1e-4)
+
+
+def test_vlm_decode_with_vision_prefix():
+    """Qwen2-VL: decode after a vision-embedding prefix must match the
+    full forward over the fused (patch-prefix + text) stream."""
+    cfg = get_config("qwen2-vl-72b").reduced()
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    B, S, SV = 2, 8, 4
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    vis = jax.random.normal(key, (B, SV, cfg.d_model))
+    batch = {"tokens": tokens, "labels": tokens, "vision_embeds": vis}
+    x, _, _ = M.forward(cfg, params, batch, remat=False)
+    want = np.asarray(
+        L.lm_logits(params["head"], params["embed"], x, cfg)
+        [..., :cfg.vocab_size], np.float32)
+
+    # the serving contract for vision inputs is prefill-with-embeddings
+    # (patch prefix fused at the input); verify the last-position logits
+    # and the filled cache line up with the forward pass
+    logits, cache = M.prefill(cfg, params, batch)
+    np.testing.assert_allclose(
+        np.asarray(logits[:, 0, :cfg.vocab_size], np.float32),
+        want[:, -1], rtol=1e-3, atol=1e-4)
+    assert int(cache["pos"]) == S
+    assert cache["k"].shape[2] == S

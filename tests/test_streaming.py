@@ -1,0 +1,85 @@
+"""Streaming pipeline (Eq. 9'), speculative/coded mitigations (App. C.4),
+multi-PS envelope and energy model (§6)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import streaming
+from repro.core.cost_model import GEMM, Device
+
+
+def _cost():
+    g = GEMM(m=1024, n=4096, q=4096)
+    d = Device(flops=6e12, dl_bw=55e6, ul_bw=7.5e6)
+    return streaming.pair_cost(g, d, alpha=16, beta=16)
+
+
+def test_pipeline_closed_form_matches_simulation():
+    c = _cost()
+    for k in (1, 2, 7, 40):
+        closed = streaming.pipeline_time(c, k, dl_lat=0.05, ul_lat=0.01)
+        sim = streaming.simulate_stream(c, k, dl_lat=0.05, ul_lat=0.01)
+        assert sim == pytest.approx(closed, rel=1e-9), k
+
+
+@settings(max_examples=20, deadline=None)
+@given(a=st.integers(1, 64), b=st.integers(1, 64), k=st.integers(1, 50))
+def test_pipeline_overlap_beats_serial(a, b, k):
+    g = GEMM(m=1024, n=4096, q=4096)
+    d = Device(flops=6e12, dl_bw=55e6, ul_bw=7.5e6)
+    c = streaming.pair_cost(g, d, a, b)
+    piped = streaming.pipeline_time(c, k)
+    serial = k * (c.t_dl + c.t_comp + c.t_ul)
+    assert piped <= serial + 1e-12
+    if k > 1:
+        assert piped < serial
+
+
+def test_jittered_stream_slower_than_deterministic():
+    c = _cost()
+    rng = np.random.default_rng(0)
+    det = streaming.simulate_stream(c, 32)
+    jit = np.mean([streaming.simulate_stream(c, 32, jitter=rng,
+                                             pareto_alpha=1.5)
+                   for _ in range(30)])
+    assert jit > det   # heavy-tailed stages expose pipeline bubbles
+
+
+def test_speculative_execution_tradeoff():
+    out1 = streaming.speculative_latency(1.0, 2.0, 1)
+    out3 = streaming.speculative_latency(1.0, 2.0, 3)
+    assert out3.expected_latency < out1.expected_latency
+    assert out3.comm_overhead == 3.0
+    r = streaming.choose_replication(c_comm=10.0, c_tail=1.0,
+                                     pareto_alpha=2.0)
+    assert 2 <= r <= 4
+
+
+def test_coded_computation_beats_replication_overhead():
+    """(n,k) coding reaches a given tail latency with less redundancy than
+    full replication (App. C.4)."""
+    k = 100
+    n = streaming.coded_design(k, pareto_alpha=2.0)
+    coded = streaming.coded_latency(1.0, 2.0, k, n)
+    assert coded.redundancy_factor < 2.0
+    # full replication needs 2x to even have a second copy
+    assert coded.expected_latency < streaming.speculative_latency(
+        1.0, 2.0, 1).expected_latency * 25
+
+
+def test_multi_ps_envelope():
+    """§6: a 25 GB/s PS supports ~1-2k devices; beyond that per-PS demand
+    scales down as 1/N."""
+    one = streaming.multi_ps_plan(1000, 250e6 / 8)
+    assert one.n_ps == 1 and one.within_envelope
+    big = streaming.multi_ps_plan(100_000, 250e6 / 8)
+    assert big.n_ps > 1 and big.within_envelope
+    assert big.per_ps_demand_gbps <= 25.0
+
+
+def test_energy_model_matches_paper_band():
+    """§6 companion analysis: 1.5-5x energy advantage, 3.5-6x carbon."""
+    est = streaming.energy_comparison(total_flops=1e19, n_devices=512,
+                                      comm_seconds_per_device=3600.0)
+    assert 1.2 < est.ratio < 6.0
+    assert est.cloud_carbon_kg / est.edge_carbon_kg > 2.0
