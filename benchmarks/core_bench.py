@@ -1,0 +1,85 @@
+"""Core perf tracker: batch-time + plan-solve wall-clock for a fixed
+fleet/arch matrix, emitted as ``BENCH_core.json`` so the perf trajectory is
+tracked PR over PR.
+
+Also demonstrates the runtime's plan-cache amortization (Table 7): the
+second ``rt.plan()`` for the same shapes must be >=10x faster than the
+first (in practice it is a near-free memo hit).
+
+Run:  PYTHONPATH=src python -m benchmarks.run --core
+"""
+from __future__ import annotations
+
+import json
+import platform
+import time
+
+# (arch, n_devices, batch, seq) — fixed matrix; keep stable across PRs so
+# the numbers stay comparable.
+MATRIX = (
+    ("opt-13b", 64, 128, 1024),
+    ("opt-13b", 256, 128, 1024),
+    ("llama2-13b", 256, 128, 1024),
+)
+
+MIN_CACHE_SPEEDUP = 10.0
+
+
+def bench_core(matrix=MATRIX) -> dict:
+    from repro.api import CleaveRuntime, Fleet
+
+    rows = []
+    for arch, n_dev, batch, seq in matrix:
+        rt = CleaveRuntime(arch=arch, fleet=Fleet.sample(n_dev, seed=0),
+                           accounting="unicast")
+        cold = rt.plan(batch, seq)
+        warm = rt.plan(batch, seq)
+        speedup = cold.solve_time / max(warm.solve_time, 1e-9)
+        rows.append({
+            "arch": arch, "devices": n_dev, "batch": batch, "seq": seq,
+            "batch_time_s": round(cold.batch_time, 3),
+            "gemm_time_s": round(cold.gemm_time, 3),
+            "opt_tail_s": round(cold.opt_tail, 4),
+            "per_device_comm_mb": round(cold.per_device_comm / 1e6, 1),
+            "per_device_mem_mb": round(cold.per_device_mem / 1e6, 1),
+            "plan_solve_cold_s": round(cold.solve_time, 4),
+            "plan_solve_warm_s": round(warm.solve_time, 6),
+            "plan_cache_speedup_x": round(speedup, 1),
+            "unique_shapes": cold.cache_misses,
+        })
+    min_speedup = min(r["plan_cache_speedup_x"] for r in rows)
+    return {
+        "bench": "core",
+        "created_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "python": platform.python_version(),
+        "matrix": rows,
+        "min_plan_cache_speedup_x": min_speedup,
+        "plan_cache_ok": bool(min_speedup >= MIN_CACHE_SPEEDUP),
+    }
+
+
+def write_bench_core(out_path: str = "BENCH_core.json",
+                     matrix=MATRIX) -> dict:
+    payload = bench_core(matrix)
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return payload
+
+
+def main(out_path: str = "BENCH_core.json") -> int:
+    payload = write_bench_core(out_path)
+    for r in payload["matrix"]:
+        print(f"core/{r['arch']}/D={r['devices']}: "
+              f"batch={r['batch_time_s']}s "
+              f"cold_plan={r['plan_solve_cold_s']}s "
+              f"warm_plan={r['plan_solve_warm_s']}s "
+              f"cache_speedup={r['plan_cache_speedup_x']}x")
+    ok = payload["plan_cache_ok"]
+    print(f"wrote {out_path}; min plan-cache speedup "
+          f"{payload['min_plan_cache_speedup_x']}x "
+          f"({'OK' if ok else f'FAIL: need >={MIN_CACHE_SPEEDUP}x'})")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

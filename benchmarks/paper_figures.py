@@ -13,7 +13,7 @@ from repro.core.gemm_dag import build_dag
 from repro.core.scheduler import schedule
 from repro.configs.base import get_config
 from repro.sim import baselines, simulator as S
-from repro.sim.devices import median_fleet, sample_fleet
+from repro.sim.devices import median_fleet
 
 
 def _timed(fn):
@@ -73,12 +73,13 @@ def fig3_table8_perbatch():
 
 def fig4_multigpu():
     """Multi-GPU cloud comparison: edge devices scale with GPU count."""
+    from repro.api import CleaveRuntime, Fleet
     rows = []
     for n_gpu, D in ((1, 512), (2, 1024), (4, 2048)):
         def run():
-            cl = S.cleave_batch_time(get_config("opt-13b"), 128, 1024,
-                                     median_fleet(D),
-                                     accounting="broadcast")
+            rt = CleaveRuntime(arch="opt-13b", fleet=Fleet.median(D),
+                               accounting="broadcast")
+            cl = rt.plan(batch=128, seq=1024)
             cloud = baselines.cloud_batch_time(
                 get_config("opt-13b").n_params(), 128, 1024, n_gpus=n_gpu)
             return cl, cloud
@@ -214,31 +215,34 @@ def table12_tails():
 
 
 def table7_solver():
-    """Cold-start vs churn re-solve times (Table 7)."""
-    from repro.core import churn, cost_model as cm
-    rng = np.random.default_rng(0)
-    devs = sample_fleet(1024, rng)
-    cfg = get_config("llama2-70b")
-    dag = build_dag(cfg, 128, 1024, attention_scores="ps")
-    t0 = time.perf_counter()
-    sp = schedule(dag, devs)
-    cold = time.perf_counter() - t0
-    g = max(dag.gemms, key=lambda g: g.flops)
-    plan = sp.plans_by_shape[(g.m, g.n, g.q, g.b, g.count)]
+    """Cold-start vs churn re-solve times (Table 7), via the runtime's
+    fleet-signature-keyed plan cache: a churn event patches cached plans in
+    seconds and the next plan() is a warm hit."""
+    from repro.api import CleaveRuntime, Fleet
+    rt = CleaveRuntime(arch="llama2-70b", fleet=Fleet.sample(1024, seed=0))
+    rep = rt.plan(batch=128, seq=1024)
+    g = max(rep.schedule.dag.gemms, key=lambda g: g.flops)
+    plan = rep.schedule.plans_by_shape[(g.m, g.n, g.q, g.b, g.count)]
     victim = plan.assignments[0].device_id
-    event = churn.FailureEvent(gemm=g, failed_ids=[victim], plan=plan)
-    rec = churn.recover(event, devs)
-    return [("table7/solver", cold, {
-        "cold_start_s": round(cold, 1),
+    cr = rt.on_failure([victim])
+    warm = rt.plan(batch=128, seq=1024)
+    return [("table7/solver", rep.solve_time, {
+        "cold_start_s": round(rep.solve_time, 1),
         "paper_cold_start_s": 600,
-        "churn_resolve_s": round(rec.solve_time, 3),
+        "churn_resolve_s": round(cr.solve_time, 3),
         "paper_churn_s": "seconds",
+        "plans_patched": cr.n_plans_patched,
+        "warm_replan_s": round(warm.solve_time, 3),
+        "warm_cache_misses": warm.cache_misses,
     })]
 
 
 def sec6_appendixC_extensions():
-    """§6 / Appendix C extensions: streaming pipeline overlap, speculative
-    vs coded straggler mitigation, multi-PS envelope, energy model."""
+    """§6 / Appendix C extensions: streaming pipeline overlap via the
+    runtime's `stream_profile`, speculative vs coded mitigation as runtime
+    policies, multi-PS envelope, energy model."""
+    from repro.api import (CleaveRuntime, CodedMitigation, Fleet,
+                           SpeculativeMitigation)
     from repro.core import streaming
     from repro.core.cost_model import Device
     from repro.core.cost_model import GEMM as G
@@ -246,33 +250,30 @@ def sec6_appendixC_extensions():
     g = G(m=131072, n=5120, q=5120)
     d = Device(flops=6e12, dl_bw=55e6, ul_bw=7.5e6, dl_lat=0.05,
                ul_lat=0.01)
-    c = streaming.pair_cost(g, d, alpha=10, beta=10)
     k = 64
-    # non-streamed: every pair pays the request round-trip overheads
-    serial = k * (d.dl_lat + c.t_dl + c.t_comp + c.t_ul + d.ul_lat)
-    piped = streaming.pipeline_time(c, k, dl_lat=0.05, ul_lat=0.01)
-    rng = np.random.default_rng(0)
-    jittered = float(np.mean([streaming.simulate_stream(
-        c, k, 0.05, 0.01, jitter=rng, pareto_alpha=2.0)
-        for _ in range(20)]))
-    r = streaming.choose_replication(10.0, 1.0, 2.0)
-    spec = streaming.speculative_latency(jittered, 2.0, r)
-    n = streaming.coded_design(k, 2.0)
-    coded = streaming.coded_latency(jittered, 2.0, k, n)
+    spec_policy = SpeculativeMitigation(pareto_alpha=2.0, c_comm=10.0,
+                                        c_tail=1.0)
+    rt = CleaveRuntime(arch="opt-13b", fleet=Fleet.from_devices([d]),
+                       mitigation=spec_policy, seed=0)
+    prof = rt.stream_profile(g, alpha=10, beta=10, k=k, pareto_alpha=2.0,
+                             device=d)
+    spec = prof.mitigation
+    coded_policy = CodedMitigation(pareto_alpha=2.0, k=k)
+    coded = coded_policy.mitigate(prof.jittered_time)
     ps = streaming.multi_ps_plan(8192, 250e6 / 8)
     en = streaming.energy_comparison(1e19, 512,
                                      comm_seconds_per_device=3600.0)
     dt = time.perf_counter() - t0
     return [("sec6_appC/streaming_and_mitigations", dt, {
-        "serial_s": round(serial, 3),
-        "pipelined_s": round(piped, 3),
-        "overlap_speedup": round(serial / piped, 2),
-        "pareto2_jittered_s": round(jittered, 3),
-        "speculative_r": r,
+        "serial_s": round(prof.serial_time, 3),
+        "pipelined_s": round(prof.pipelined_time, 3),
+        "overlap_speedup": round(prof.overlap_speedup, 2),
+        "pareto2_jittered_s": round(prof.jittered_time, 3),
+        "speculative_r": spec_policy.r,
         "speculative_s": round(spec.expected_latency, 3),
-        "coded_n_for_k64": n,
+        "coded_n_for_k64": coded_policy.n,
         "coded_s": round(coded.expected_latency, 3),
-        "coded_redundancy": round(coded.redundancy_factor, 2),
+        "coded_redundancy": round(coded.redundancy, 2),
         "multi_ps_for_8192_dev": ps.n_ps,
         "energy_edge_advantage_x": round(en.ratio, 2),
         "carbon_advantage_x": round(en.cloud_carbon_kg

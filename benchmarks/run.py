@@ -3,6 +3,9 @@ microbenches.  Prints ``name,us_per_call,derived`` CSV.
 
 Usage:
     PYTHONPATH=src python -m benchmarks.run [--only substring] [--skip-kernels]
+    PYTHONPATH=src python -m benchmarks.run --core   # perf tracker:
+        writes BENCH_core.json (batch-time + plan-solve wall-clock matrix,
+        asserts plan-cache reuse >=10x) and exits.
 """
 from __future__ import annotations
 
@@ -16,7 +19,15 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--skip-kernels", action="store_true")
     ap.add_argument("--out", default=None)
+    ap.add_argument("--core", action="store_true",
+                    help="run only the core perf tracker and write "
+                         "BENCH_core.json")
+    ap.add_argument("--core-out", default="BENCH_core.json")
     args = ap.parse_args()
+
+    if args.core:
+        from benchmarks.core_bench import main as core_main
+        sys.exit(core_main(args.core_out))
 
     from benchmarks import paper_figures
     fns = list(paper_figures.ALL)

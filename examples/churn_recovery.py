@@ -1,44 +1,53 @@
-"""Device churn walkthrough (§4.2 / Fig 7): fail devices mid-batch, watch
-the incremental cache-aware re-solve redistribute only the orphaned
-sub-GEMM shards, and compare recovery latency against the checkpoint /
-layer-recompute baselines.
+"""Device churn walkthrough (§4.2 / Fig 7) on the `CleaveRuntime` session:
+fail devices mid-batch, watch the incremental cache-aware re-solve
+redistribute only the orphaned sub-GEMM shards, see the runtime patch its
+plan cache instead of re-solving cold, and compare recovery latency against
+the checkpoint / layer-recompute baselines.
 
 Run:  PYTHONPATH=src python examples/churn_recovery.py
 """
 import numpy as np
 
-from repro.core import churn, cost_model as cm, executor
+from repro.api import CleaveRuntime, Fleet
+from repro.core import churn, cost_model as cm
 from repro.sim import simulator as S
-from repro.sim.devices import mtbf_minutes, sample_fleet
 
-rng = np.random.default_rng(0)
-devices = sample_fleet(256, rng)
-
-print(f"fleet: 256 devices; system MTBF at 1%/hr churn: "
-      f"{mtbf_minutes(256):.0f} min")
+rt = CleaveRuntime(arch="opt-13b", fleet=Fleet.sample(256, seed=0))
+print(f"fleet: {len(rt.fleet)} devices; system MTBF at 1%/hr churn: "
+      f"{rt.fleet.mtbf_minutes():.0f} min")
 
 # a representative weight GEMM mid-level
 g = cm.GEMM(m=2048, n=4096, q=2048)
-plan = cm.solve_gemm(g, devices)
+plan = rt.plan_gemm(g)
 print(f"GEMM {g.m}x{g.n}x{g.q}: {len(plan.assignments)} sub-GEMM shards, "
       f"makespan {plan.makespan:.2f}s")
 
 for n_fail in (1, 4, 16):
     victims = sorted({a.device_id for a in plan.assignments})[:n_fail]
     event = churn.FailureEvent(gemm=g, failed_ids=victims, plan=plan)
-    rec = churn.recover(event, devices)
+    rec = churn.recover(event, rt.fleet.devices)
     print(f"  {n_fail:2d} failures -> re-solve {rec.solve_time * 1000:6.1f}ms, "
           f"recovery {rec.recovery_time:6.3f}s, "
           f"recomputed {rec.recomputed_fraction * 100:5.2f}% of the output")
 
-# numerical proof: output identical after failure + recovery
+# numerical proof: output identical after failure + recovery + eviction
+rng = np.random.default_rng(0)
 A = rng.standard_normal((g.m, g.n)).astype(np.float32)
 B = rng.standard_normal((g.n, g.q)).astype(np.float32)
-rep = executor.execute_plan(g, plan, A, B, devices,
-                            fail_ids=[plan.assignments[0].device_id],
-                            rng=rng)
-err = np.abs(rep.output - A.astype(np.float64) @ B).max()
-print(f"post-recovery output error: {err:.2e}")
+victim = plan.assignments[0].device_id
+step = rt.execute_step(A, B, gemm=g, fail_ids=[victim])
+err = np.abs(step.output - A.astype(np.float64) @ B).max()
+print(f"post-recovery output error: {err:.2e} "
+      f"(verified={step.verified})")
+
+report = rt.on_failure([victim])
+print(f"eviction: {report.n_plans_patched} cached plans patched "
+      f"(+{report.n_plans_carried} carried) in "
+      f"{report.solve_time * 1000:.0f}ms; re-executing warm...")
+step2 = rt.execute_step(A, B, gemm=g)
+err2 = np.abs(step2.output - A.astype(np.float64) @ B).max()
+print(f"post-eviction output error: {err2:.2e} "
+      f"(plan_cached={step2.plan_cached})")
 
 print("\n=== Fig 7: recovery latency vs baselines (OPT-13B, 256 dev) ===")
 out = S.churn_experiment(n_devices=256)

@@ -1,14 +1,20 @@
 """Edge-fleet simulation: reproduce the paper's headline comparisons on
 your laptop (Fig 3 row, Fig 8 strong scaling, Fig 6 stragglers).
 
+The experiment drivers in ``repro.sim.simulator`` all price CLEAVE through
+the unified ``repro.api.CleaveRuntime`` session (unicast/broadcast are
+accounting strategies on the runtime, not separate code paths).
+
 Run:  PYTHONPATH=src python examples/edge_simulation.py
 """
+from repro.api import BroadcastAccounting, UnicastAccounting  # noqa: F401
 from repro.sim import simulator as S
 
 print("=== Fig 3 / Table 8: per-batch runtime, Llama2-13B, 512 devices ===")
-row = S.compare_systems("llama2-13b", 128, 1024, 512)
+row = S.compare_systems("llama2-13b", 128, 1024, 512,
+                        accounting=UnicastAccounting.name)
 row_b = S.compare_systems("llama2-13b", 128, 1024, 512,
-                          accounting="broadcast")
+                          accounting=BroadcastAccounting.name)
 print(f"  CLEAVE (Eq.3 unicast):      {row['cleave']:8.1f} s")
 print(f"  CLEAVE (idealized §3.1):    {row_b['cleave']:8.1f} s   "
       f"(paper Table 8: 16.6 s)")

@@ -1,53 +1,76 @@
-"""Quickstart: the CLEAVE pipeline end-to-end in 60 lines.
+"""Quickstart: the CLEAVE pipeline end-to-end through the unified
+`CleaveRuntime` session API.
 
-1. Build a model config and trace its GEMM DAG.
-2. Sample a heterogeneous edge fleet and solve the schedule.
-3. Execute one GEMM's sub-task plan numerically (with Freivalds
-   verification) and survive a mid-level device failure.
+One runtime object owns the whole plan -> execute -> recover loop:
+
+1. `CleaveRuntime(arch=..., fleet=Fleet.sample(...))` — model + edge fleet.
+2. `rt.plan(batch, seq)` — trace the GEMM DAG and solve the schedule; a
+   second call for the same shapes is a near-free cache hit (Table 7
+   cold-start amortization).
+3. `rt.execute_step(A, B, fail_ids=[...])` — numerically execute one GEMM's
+   sub-task plan with Freivalds verification, surviving a mid-level device
+   failure.
+4. `rt.on_failure([...])` — evict the failed device; cached plans are
+   incrementally *patched* (§4.2), so the next step re-plans warm.
+
+(The old entry points — `schedule`, `execute_plan`, `cleave_batch_time` —
+still work; see docs/API.md for the deprecation path.)
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.configs.base import get_config
-from repro.core import cost_model as cm, executor
-from repro.core.gemm_dag import build_dag
-from repro.core.scheduler import schedule
-from repro.sim.devices import sample_fleet
+from repro.api import CleaveRuntime, Fleet
+from repro.core import cost_model as cm
 
-rng = np.random.default_rng(0)
+# 1. one session object: OPT-13B over 256 heterogeneous edge devices
+rt = CleaveRuntime(arch="opt-13b", fleet=Fleet.sample(256, seed=0),
+                   accounting="unicast")
+print(f"model: {rt.cfg.name}  params={rt.cfg.n_params() / 1e9:.1f}B")
+print(f"fleet: {rt.fleet}")
 
-# 1. trace the GEMM DAG of OPT-13B at the paper's batch/seq setting
-cfg = get_config("opt-13b")
-dag = build_dag(cfg, batch=128, seq=1024, attention_scores="ps")
-print(f"model: {cfg.name}  params={cfg.n_params() / 1e9:.1f}B")
+# 2. plan the batch schedule (cold), then again (cache hit)
+report = rt.plan(batch=128, seq=1024)
+dag = report.schedule.dag
 print(f"DAG: {len(dag.gemms)} GEMM nodes, {dag.n_levels} levels, "
-      f"{dag.total_flops() / 1e12:.0f} TFLOPs/batch, "
-      f"{len(dag.unique_shapes())} unique shapes")
-
-# 2. schedule across 256 heterogeneous edge devices
-devices = sample_fleet(256, rng)
-plan = schedule(dag, devices)
-print(f"schedule: batch_time={plan.batch_time:.1f}s "
-      f"(gemm={plan.gemm_time:.1f}s + optimizer tail "
-      f"{plan.opt_tail * 1000:.0f}ms)")
-print(f"per-device comm <= {plan.max_per_device_comm / 1e9:.1f} GB, "
-      f"per-device memory <= {plan.max_per_device_mem / 1e6:.0f} MB "
+      f"{dag.total_flops() / 1e12:.0f} TFLOPs/batch")
+print(f"schedule: batch_time={report.batch_time:.1f}s "
+      f"(gemm={report.gemm_time:.1f}s + optimizer tail "
+      f"{report.opt_tail * 1000:.0f}ms); "
+      f"solved {report.cache_misses} unique shapes "
+      f"in {report.solve_time:.2f}s")
+print(f"per-device comm <= {report.per_device_comm / 1e9:.1f} GB, "
+      f"per-device memory <= {report.per_device_mem / 1e6:.0f} MB "
       f"(phone budget: 512 MB)")
+warm = rt.plan(batch=128, seq=1024)
+print(f"re-plan (cache hit): {warm.solve_time * 1e6:.0f}us, "
+      f"{report.solve_time / max(warm.solve_time, 1e-9):.0f}x faster "
+      f"than cold solve")
 
 # 3. execute one weight GEMM's plan, kill a device mid-level, verify output
+rng = np.random.default_rng(0)
 g = cm.GEMM(m=1024, n=2048, q=1024)
-gplan = cm.solve_gemm(g, devices)
+gplan = rt.plan_gemm(g)
 A = rng.standard_normal((g.m, g.n)).astype(np.float32)
 B = rng.standard_normal((g.n, g.q)).astype(np.float32)
 victim = gplan.assignments[0].device_id
-report = executor.execute_plan(g, gplan, A, B, devices,
-                               fail_ids=[victim], rng=rng)
-err = np.abs(report.output - A.astype(np.float64) @ B).max()
-print(f"executed {report.n_tasks} sub-GEMM tasks "
-      f"({report.n_recovered} recovered after killing device {victim}); "
+step = rt.execute_step(A, B, gemm=g, fail_ids=[victim])
+err = np.abs(step.output - A.astype(np.float64) @ B).max()
+print(f"executed {step.n_tasks} sub-GEMM tasks "
+      f"({step.n_recovered} recovered after killing device {victim}); "
       f"max error vs monolithic product: {err:.2e}; "
-      f"Freivalds verified: {report.verified}")
-print(f"recovery: {report.recovery.recomputed_fraction * 100:.2f}% of the "
-      f"output recomputed in {report.recovery.recovery_time:.3f}s "
-      f"(re-solve took {report.recovery.solve_time * 1000:.0f}ms)")
+      f"Freivalds verified: {step.verified}")
+print(f"recovery: {step.recovery.recomputed_fraction * 100:.2f}% of the "
+      f"output recomputed in {step.recovery.recovery_time:.3f}s "
+      f"(re-solve took {step.recovery.solve_time * 1000:.0f}ms)")
+
+# 4. evict the failed device: the plan cache is patched, not rebuilt
+churn = rt.on_failure([victim])
+print(f"churn: {churn.n_plans_patched} cached plans patched, "
+      f"{churn.n_plans_carried} carried unchanged, in "
+      f"{churn.solve_time * 1000:.0f}ms "
+      f"({churn.n_survivors} survivors); next step is warm")
+step2 = rt.execute_step(A, B, gemm=g)
+err2 = np.abs(step2.output - A.astype(np.float64) @ B).max()
+print(f"post-churn step: plan_cached={step2.plan_cached}, "
+      f"max error {err2:.2e}")

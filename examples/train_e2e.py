@@ -20,6 +20,9 @@ ap.add_argument("--batch", type=int, default=8)
 ap.add_argument("--seq", type=int, default=128)
 ap.add_argument("--vocab", type=int, default=4096)
 ap.add_argument("--ckpt-dir", default=None)
+ap.add_argument("--edge-plan", type=int, default=0, metavar="N",
+                help="also project this run onto an N-device edge fleet "
+                     "via the CleaveRuntime session API")
 args = ap.parse_args()
 
 argv = ["--arch", "llama3-8b", "--reduced",
@@ -29,4 +32,6 @@ argv = ["--arch", "llama3-8b", "--reduced",
         "--lr", "6e-4", "--log-every", "10"]
 if args.ckpt_dir:
     argv += ["--ckpt-dir", args.ckpt_dir]
+if args.edge_plan:
+    argv += ["--edge-plan", str(args.edge_plan)]
 sys.exit(train_main(argv))

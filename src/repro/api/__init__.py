@@ -1,0 +1,29 @@
+"""Unified CLEAVE session API — the canonical entry surface.
+
+``CleaveRuntime`` is one object for the whole plan → execute → recover →
+stream loop that `sim`, `launch`, `examples`, and `benchmarks` previously
+re-wired by hand from ``build_dag`` / ``schedule`` / ``execute_plan`` /
+``churn.recover``.  See ``docs/API.md``.
+
+The old entry points (``sim.simulator.cleave_batch_time``,
+``core.scheduler.schedule``, ``core.executor.execute_plan``) keep working —
+``cleave_batch_time`` is a deprecated shim over this API; the other two are
+the engines the runtime itself drives.
+"""
+from repro.api.accounting import (AccountingResult, AccountingStrategy,
+                                  BroadcastAccounting, UnicastAccounting,
+                                  get_accounting)
+from repro.api.fleet import Fleet
+from repro.api.mitigation import (CodedMitigation, MitigationPolicy,
+                                  MitigationReport, NoMitigation,
+                                  SpeculativeMitigation, get_mitigation)
+from repro.api.runtime import (ChurnReport, CleaveRuntime, PlanReport,
+                               PlanRequest, StepReport, StreamReport)
+
+__all__ = [
+    "AccountingResult", "AccountingStrategy", "BroadcastAccounting",
+    "ChurnReport", "CleaveRuntime", "CodedMitigation", "Fleet",
+    "MitigationPolicy", "MitigationReport", "NoMitigation", "PlanReport",
+    "PlanRequest", "SpeculativeMitigation", "StepReport", "StreamReport",
+    "UnicastAccounting", "get_accounting", "get_mitigation",
+]

@@ -1,0 +1,401 @@
+"""`CleaveRuntime`: the unified plan → execute → recover → stream session.
+
+One object owns what every caller used to re-wire by hand (§3.2, §4):
+
+* DAG tracing (``build_dag``) with per-(batch, seq) memoization,
+* scheduling (``scheduler.schedule``) against a **runtime-owned,
+  fleet-signature-keyed plan cache**, so repeated steps and churn re-plans
+  reuse solved shapes (the paper's cold-start amortization, Table 7),
+* numerical execution with failure injection + Freivalds verification
+  (``executor.execute_plan``),
+* churn recovery (``churn.recover``) that *patches* cached plans instead of
+  re-solving them from scratch (§4.2 incremental re-solve),
+* streaming latency profiling and pluggable straggler mitigation
+  (``core.streaming`` via a ``mitigation=`` policy),
+* unicast/broadcast accounting as a strategy object shared with the
+  simulator.
+
+Typical session::
+
+    rt = CleaveRuntime(arch="opt-13b", fleet=Fleet.sample(256, seed=0),
+                       accounting="broadcast")
+    report = rt.plan(batch=128, seq=1024)     # cold solve
+    report = rt.plan(batch=128, seq=1024)     # cache hit, ~free
+    step = rt.execute_step(A, B, fail_ids=[7])   # survives the failure
+    rt.on_failure([7])                        # evict + patch cached plans
+    step = rt.execute_step(A, B)              # warm re-plan, exact output
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core import churn, cost_model as cm, executor
+from repro.core.gemm_dag import GemmDag, build_dag
+from repro.core.scheduler import (SchedulePlan, plan_shape_key, schedule,
+                                  solve_level_gemm)
+from repro.api.accounting import (AccountingResult, AccountingStrategy,
+                                  get_accounting)
+from repro.api.fleet import Fleet
+from repro.api.mitigation import (MitigationPolicy, MitigationReport,
+                                  get_mitigation)
+
+
+# ------------------------------------------------------------------- types --
+
+@dataclass(frozen=True)
+class PlanRequest:
+    """What to plan: one training (or forward-only) batch of the session's
+    architecture.  Hashable — also the runtime's DAG-cache key."""
+    batch: int
+    seq: int
+    attention_scores: str = "ps"
+    backward: bool = True
+    lm_head: bool = True
+    heterogeneity_aware: bool = True
+
+
+@dataclass
+class PlanReport:
+    """Result of :meth:`CleaveRuntime.plan`: the priced batch schedule."""
+    request: PlanRequest
+    accounting: str
+    batch_time: float
+    gemm_time: float
+    opt_tail: float
+    per_device_comm: float
+    per_device_mem: float
+    schedule: SchedulePlan
+    fleet_signature: str
+    solve_time: float           # wall-clock of this plan() call
+    cache_hits: int             # unique shapes served from the plan cache
+    cache_misses: int           # unique shapes solved cold this call
+    mitigation: Optional[MitigationReport] = None
+
+    @property
+    def cached(self) -> bool:
+        return self.cache_misses == 0
+
+
+@dataclass
+class StepReport:
+    """Result of :meth:`CleaveRuntime.execute_step`: one GEMM executed
+    numerically on the fleet (exact-semantics claim, §3.2)."""
+    gemm: cm.GEMM
+    plan: cm.Plan
+    output: np.ndarray
+    verified: bool
+    n_tasks: int
+    n_recovered: int
+    recovery: Optional[churn.RecoveryResult]
+    exec_time: float
+    plan_cached: bool
+
+
+@dataclass
+class ChurnReport:
+    """Result of :meth:`CleaveRuntime.on_failure`: the fleet shrank and the
+    plan cache was incrementally patched (§4.2)."""
+    failed_ids: List[int]
+    n_survivors: int
+    n_plans_patched: int        # plans with orphaned shards, re-solved
+    #                             incrementally over the survivors
+    n_plans_carried: int        # plans untouched by the failure, re-keyed
+    n_plans_dropped: int        # cached plans that must re-solve cold
+    recovery_time: float        # worst patch-schedule makespan
+    recomputed_fraction: float  # worst recomputed output share
+    solve_time: float           # wall-clock of the incremental patching
+    fleet_signature: str
+
+
+@dataclass
+class StreamReport:
+    """Result of :meth:`CleaveRuntime.stream_profile`: the three-stage
+    DL/compute/UL pipeline (Eq. 9') with optional Pareto jitter and the
+    session's mitigation policy applied."""
+    serial_time: float
+    pipelined_time: float
+    jittered_time: float
+    mitigation: MitigationReport
+
+    @property
+    def overlap_speedup(self) -> float:
+        return self.serial_time / max(self.pipelined_time, 1e-12)
+
+
+# ----------------------------------------------------------------- runtime --
+
+class CleaveRuntime:
+    """The canonical CLEAVE entry surface (see module docstring)."""
+
+    def __init__(self, arch: Union[str, object] = "opt-13b",
+                 fleet: Optional[Fleet] = None, *,
+                 accounting: Union[str, AccountingStrategy] = "unicast",
+                 mitigation: Union[str, MitigationPolicy, None] = "none",
+                 ps: Optional[cm.PSConfig] = None,
+                 attention_scores: str = "ps",
+                 heterogeneity_aware: bool = True,
+                 seed: int = 0):
+        self.cfg = get_config(arch) if isinstance(arch, str) else arch
+        self.fleet = fleet if fleet is not None else Fleet.sample(256,
+                                                                  seed=seed)
+        self.accounting = get_accounting(accounting)
+        self.mitigation = get_mitigation(mitigation)
+        self.ps = ps or cm.PSConfig()
+        self.attention_scores = attention_scores
+        self.heterogeneity_aware = heterogeneity_aware
+        self.seed = seed
+        self.rng = np.random.default_rng(seed)
+        # compact event log (dicts): never holds outputs or plans, so a
+        # long-running session does not pin per-step matrices
+        self.history: List[dict] = []
+        self._dag_cache: Dict[PlanRequest, GemmDag] = {}
+        # (fleet_signature, heterogeneity_aware) -> {shape_key: cm.Plan}
+        self._plan_caches: Dict[Tuple[str, bool], Dict[tuple, cm.Plan]] = {}
+        # (request, fleet_signature) -> solved SchedulePlan
+        self._sched_cache: Dict[Tuple[PlanRequest, str], SchedulePlan] = {}
+
+    # ---------------------------------------------------------------- plan --
+
+    def plan(self, batch: Optional[int] = None, seq: Optional[int] = None,
+             *, request: Optional[PlanRequest] = None) -> PlanReport:
+        """Solve (or warm-load) the batch schedule for the session fleet."""
+        if request is None:
+            if batch is None or seq is None:
+                raise ValueError("plan() needs batch+seq or a PlanRequest")
+            request = PlanRequest(
+                batch=batch, seq=seq,
+                attention_scores=self.attention_scores,
+                heterogeneity_aware=self.heterogeneity_aware)
+        dag = self._dag(request)
+        cache = self._cache(request.heterogeneity_aware)
+        sched_key = (request, self.fleet.signature())
+        t0 = time.perf_counter()
+        sp = self._sched_cache.get(sched_key)
+        if sp is not None:
+            # repeated step with an unchanged fleet: the solved schedule is
+            # reused outright (Table 7 cold-start amortization)
+            hits, misses = len(sp.plans_by_shape), 0
+        else:
+            shapes = {plan_shape_key(g) + (g.count,) for g in dag.gemms}
+            hits = sum(1 for k in shapes if k in cache)
+            misses = len(shapes) - hits
+            sp = schedule(dag, self.fleet.devices, ps=self.ps,
+                          heterogeneity_aware=request.heterogeneity_aware,
+                          plan_cache=cache)
+            self._sched_cache[sched_key] = sp
+        solve_time = time.perf_counter() - t0
+        acc = self.accounting.apply(dag, sp)
+        report = PlanReport(
+            request=request, accounting=self.accounting.name,
+            batch_time=acc.batch_time, gemm_time=acc.gemm_time,
+            opt_tail=acc.opt_tail, per_device_comm=acc.per_device_comm,
+            per_device_mem=acc.per_device_mem, schedule=sp,
+            fleet_signature=self.fleet.signature(), solve_time=solve_time,
+            cache_hits=hits, cache_misses=misses,
+            mitigation=self.mitigation.mitigate(acc.batch_time))
+        self.history.append({
+            "event": "plan", "batch": request.batch, "seq": request.seq,
+            "batch_time": report.batch_time,
+            "solve_time": report.solve_time, "cached": report.cached})
+        return report
+
+    def plan_gemm(self, gemm: cm.GEMM) -> cm.Plan:
+        """Solve (or warm-load) one GEMM's sub-task plan.  Shares the shape
+        cache with :meth:`plan`, so a GEMM appearing in a planned DAG is
+        already warm."""
+        plan, _ = self._solve_gemm(gemm)
+        return plan
+
+    # ------------------------------------------------------------- execute --
+
+    def execute_step(self, A: np.ndarray, B: np.ndarray, *,
+                     gemm: Optional[cm.GEMM] = None,
+                     fail_ids: Sequence[int] = (),
+                     corrupt_ids: Sequence[int] = (),
+                     verify: bool = True) -> StepReport:
+        """Numerically execute one GEMM's plan on the fleet.  Devices in
+        ``fail_ids`` vanish mid-level (in-flight recovery via
+        ``churn.recover``); ``corrupt_ids`` return poisoned blocks that
+        Freivalds verification must catch.  Uses the session RNG, so a
+        fixed-seed session is bit-reproducible."""
+        if gemm is None:
+            gemm = cm.GEMM(m=A.shape[0], n=A.shape[1], q=B.shape[1])
+        plan, cached = self._solve_gemm(gemm)
+        t0 = time.perf_counter()
+        rep = executor.execute_plan(gemm, plan, A, B, self.fleet.devices,
+                                    fail_ids=fail_ids,
+                                    corrupt_ids=corrupt_ids,
+                                    rng=self.rng, verify=verify)
+        report = StepReport(
+            gemm=gemm, plan=plan, output=rep.output, verified=rep.verified,
+            n_tasks=rep.n_tasks, n_recovered=rep.n_recovered,
+            recovery=rep.recovery, exec_time=time.perf_counter() - t0,
+            plan_cached=cached)
+        self.history.append({
+            "event": "execute_step", "shape": (gemm.m, gemm.n, gemm.q),
+            "verified": report.verified, "n_tasks": report.n_tasks,
+            "n_recovered": report.n_recovered, "plan_cached": cached})
+        return report
+
+    # -------------------------------------------------------------- recover --
+
+    def on_failure(self, ids: Sequence[int]) -> ChurnReport:
+        """Evict failed devices from the session fleet and incrementally
+        patch every cached plan: survivors keep their shards, only the
+        orphaned rectangles are re-solved (cache-aware, §4.2).  Patched
+        plans land in the *new* fleet signature's cache, so the next
+        :meth:`plan` / :meth:`execute_step` is warm instead of cold."""
+        failed = set(int(i) for i in ids)
+        new_fleet = self.fleet.without(failed)
+        if not len(new_fleet):
+            raise RuntimeError("no surviving devices")
+        survivors = new_fleet.devices
+        old_sig, new_sig = self.fleet.signature(), new_fleet.signature()
+        t0 = time.perf_counter()
+        patched = carried = dropped = 0
+        worst_time = worst_frac = 0.0
+        for het in (True, False):
+            old_cache = self._plan_caches.get((old_sig, het), {})
+            if not old_cache:
+                continue
+            new_cache = self._plan_caches.setdefault((new_sig, het), {})
+            for key, plan in old_cache.items():
+                if key in new_cache:
+                    continue
+                out = _patch_plan(plan, failed, survivors)
+                if out is None:
+                    dropped += 1
+                    continue
+                new_plan, rec = out
+                new_cache[key] = new_plan
+                if rec is None:
+                    carried += 1
+                else:
+                    patched += 1
+                    worst_time = max(worst_time, rec.recovery_time)
+                    worst_frac = max(worst_frac, rec.recomputed_fraction)
+        report = ChurnReport(
+            failed_ids=sorted(failed), n_survivors=len(survivors),
+            n_plans_patched=patched, n_plans_carried=carried,
+            n_plans_dropped=dropped,
+            recovery_time=worst_time, recomputed_fraction=worst_frac,
+            solve_time=time.perf_counter() - t0,
+            fleet_signature=new_sig)
+        self.fleet = new_fleet
+        self.history.append({
+            "event": "on_failure", "failed_ids": report.failed_ids,
+            "n_survivors": report.n_survivors,
+            "n_plans_patched": report.n_plans_patched,
+            "n_plans_carried": report.n_plans_carried,
+            "n_plans_dropped": report.n_plans_dropped})
+        return report
+
+    def on_join(self, device: cm.Device) -> Fleet:
+        """Admit a joiner: folded into the fleet for the next round (§3.2).
+        The fleet signature changes, so subsequent plans re-solve and start
+        assigning the newcomer work."""
+        self.fleet = self.fleet.admit(device)
+        return self.fleet
+
+    # -------------------------------------------------------------- stream --
+
+    def stream_profile(self, gemm: cm.GEMM, *, alpha: int = 10,
+                       beta: int = 10, k: int = 64,
+                       pareto_alpha: float = 0.0,
+                       device: Optional[cm.Device] = None,
+                       n_trials: int = 20) -> StreamReport:
+        """Profile the streamed row-column pipeline (Eq. 9') for ``k``
+        (alpha x beta) work quanta on a representative device, with optional
+        Pareto(α) stage jitter, and apply the session mitigation policy to
+        the jittered latency."""
+        from repro.core import streaming
+        if device is None:
+            devs = sorted(self.fleet.devices, key=lambda d: d.flops)
+            device = devs[len(devs) // 2]
+        c = streaming.pair_cost(gemm, device, alpha=alpha, beta=beta)
+        serial = k * (device.dl_lat + c.t_dl + c.t_comp + c.t_ul
+                      + device.ul_lat)
+        piped = streaming.pipeline_time(c, k, dl_lat=device.dl_lat,
+                                        ul_lat=device.ul_lat)
+        if pareto_alpha > 1.0:
+            jittered = float(np.mean([
+                streaming.simulate_stream(c, k, device.dl_lat,
+                                          device.ul_lat, jitter=self.rng,
+                                          pareto_alpha=pareto_alpha)
+                for _ in range(n_trials)]))
+        else:
+            jittered = piped
+        report = StreamReport(serial_time=serial, pipelined_time=piped,
+                              jittered_time=jittered,
+                              mitigation=self.mitigation.mitigate(jittered))
+        self.history.append({
+            "event": "stream_profile", "k": k,
+            "overlap_speedup": report.overlap_speedup})
+        return report
+
+    # ----------------------------------------------------------- internals --
+
+    def _dag(self, request: PlanRequest) -> GemmDag:
+        key = request
+        if key not in self._dag_cache:
+            self._dag_cache[key] = build_dag(
+                self.cfg, request.batch, request.seq,
+                backward=request.backward, lm_head=request.lm_head,
+                attention_scores=request.attention_scores)
+        return self._dag_cache[key]
+
+    def _cache(self, heterogeneity_aware: bool) -> Dict[tuple, cm.Plan]:
+        return self._plan_caches.setdefault(
+            (self.fleet.signature(), heterogeneity_aware), {})
+
+    def _solve_gemm(self, gemm: cm.GEMM) -> Tuple[cm.Plan, bool]:
+        cache = self._cache(True)
+        key = plan_shape_key(gemm) + (gemm.count,)
+        if key in cache:
+            return cache[key], True
+        # same solver path as schedule(), so cache entries are identical
+        # regardless of whether plan() or plan_gemm() created them
+        plan = solve_level_gemm(gemm, self.fleet.devices)
+        cache[key] = plan
+        return plan, False
+
+
+# ------------------------------------------------------------ plan patching --
+
+def _patch_plan(plan: cm.Plan, failed: set,
+                survivors: Sequence[cm.Device]
+                ) -> Optional[Tuple[cm.Plan, Optional[churn.RecoveryResult]]]:
+    """Carry one cached plan across a churn event: survivors keep their
+    rectangles; each orphaned rectangle is re-solved over the survivors with
+    cache-aware communication and grafted back in place.  Returns ``None``
+    when the plan cannot be patched (instance-granular or n-split plans
+    re-solve cold instead)."""
+    if plan.instances is not None or plan.n_split != 1:
+        return None
+    orphans = [a for a in plan.assignments if a.device_id in failed]
+    if not orphans:
+        # untouched by this failure; reuse under the new signature
+        return plan, None
+    hit = sorted(failed & {a.device_id for a in plan.assignments})
+    event = churn.FailureEvent(gemm=plan.gemm, failed_ids=hit, plan=plan)
+    rec = churn.recover(event, survivors)
+    assignments = [a for a in plan.assignments if a.device_id not in failed]
+    for rect, patch in zip(orphans, rec.patch_plans):
+        for pa in patch.assignments:
+            assignments.append(cm.Assignment(
+                device_id=pa.device_id,
+                r0=rect.r0 + pa.r0, r1=rect.r0 + pa.r1,
+                c0=rect.c0 + pa.c0, c1=rect.c0 + pa.c1))
+    active = {a.device_id for a in assignments}
+    new_plan = cm.Plan(
+        gemm=plan.gemm, assignments=assignments, makespan=0.0,
+        lower_bound=cm.lower_bound(plan.gemm, survivors),
+        excluded=[d.device_id for d in survivors
+                  if d.device_id not in active])
+    new_plan.makespan = cm.plan_makespan(plan.gemm, survivors, new_plan)
+    return new_plan, rec

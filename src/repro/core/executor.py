@@ -9,11 +9,12 @@ decomposition is executed by the Pallas ``block_gemm`` kernel grid.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Union
 
 import numpy as np
 
 from repro.core import churn, cost_model as cm
+from repro.core.seeding import as_rng
 from repro.core.verify import freivalds
 
 
@@ -30,13 +31,18 @@ def execute_plan(gemm: cm.GEMM, plan: cm.Plan, A: np.ndarray, B: np.ndarray,
                  devices: Sequence[cm.Device],
                  fail_ids: Sequence[int] = (),
                  corrupt_ids: Sequence[int] = (),
-                 rng: Optional[np.random.Generator] = None,
+                 rng: Union[np.random.Generator, int, None] = None,
                  verify: bool = True) -> ExecutionReport:
     """Execute every assignment; devices in `fail_ids` vanish before
     uploading (their shards are re-solved via churn.recover and executed by
     survivors); devices in `corrupt_ids` return poisoned blocks which must be
-    caught by Freivalds verification."""
-    rng = rng or np.random.default_rng(0)
+    caught by Freivalds verification.
+
+    `rng` seeds the Freivalds check vectors: a Generator, an int seed, or
+    None (seed 0).  Prefer driving this through
+    ``repro.api.CleaveRuntime.execute_step``, which owns a session RNG.
+    """
+    rng = as_rng(rng)
     m, q = gemm.m, gemm.q
     assert A.shape == (m, gemm.n) and B.shape == (gemm.n, q)
     C = np.zeros((m, q), np.float64)

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, MutableMapping, Optional, Sequence
 
 import numpy as np
 
@@ -52,11 +52,35 @@ def plan_shape_key(g: cm.GEMM) -> tuple:
     return (g.m, g.n, g.q, g.b)
 
 
+def solve_level_gemm(g: cm.GEMM, devices: Sequence[cm.Device]) -> cm.Plan:
+    """Solve one level-GEMM the way the batch scheduler would: count-many
+    independent instances are scheduled whole across the pool (streamed)
+    unless decomposing each instance into sub-GEMM waves is faster.  The
+    single entry point for anything that inserts into a shared plan cache,
+    so cached plans are identical regardless of which caller solved them."""
+    if g.count > 1:
+        batched = cm.solve_batched(g, devices)
+        sub = cm.solve_gemm(g, devices)
+        waves = _wave_factor(g, sub, len(devices))
+        if batched.makespan <= sub.makespan * waves:
+            return batched
+        sub.makespan *= waves
+        return sub
+    return cm.solve_gemm(g, devices)
+
+
 def schedule(dag: GemmDag, devices: Sequence[cm.Device],
              ps: Optional[cm.PSConfig] = None,
-             heterogeneity_aware: bool = True) -> SchedulePlan:
+             heterogeneity_aware: bool = True,
+             plan_cache: Optional[MutableMapping] = None) -> SchedulePlan:
     """Solve the batch schedule.  With `heterogeneity_aware=False` every
-    device gets an equal share regardless of capability (Table 9 ablation)."""
+    device gets an equal share regardless of capability (Table 9 ablation).
+
+    `plan_cache`: optional shape-keyed mapping owned by the caller (the
+    `CleaveRuntime` keys it by fleet signature).  Shapes already present are
+    reused instead of re-solved — cold-start amortization across repeated
+    steps (Table 7).  The cache must only ever see one device fleet (and one
+    `heterogeneity_aware` setting)."""
     ps = ps or cm.PSConfig()
     real_devices = list(devices)
     if not heterogeneity_aware:
@@ -64,29 +88,18 @@ def schedule(dag: GemmDag, devices: Sequence[cm.Device],
         # fleet: the slowest participant bounds each level (Table 9)
         devices = _homogenize(devices)
 
-    plans: Dict[tuple, cm.Plan] = {}
+    plans: MutableMapping = plan_cache if plan_cache is not None else {}
     for g in dag.gemms:
         k = plan_shape_key(g) + (g.count,)
         if k in plans:
             continue
-        if g.count > 1:
-            # count-many independent instances: schedule whole instances
-            # across the pool (streamed), unless decomposing each instance
-            # into sub-GEMM waves is faster.
-            batched = cm.solve_batched(g, devices)
-            sub = cm.solve_gemm(g, devices)
-            waves = _wave_factor(g, sub, len(devices))
-            if batched.makespan <= sub.makespan * waves:
-                plans[k] = batched
-            else:
-                sub.makespan *= waves
-                plans[k] = sub
-        else:
-            plans[k] = cm.solve_gemm(g, devices)
+        plans[k] = solve_level_gemm(g, devices)
 
+    dag_keys = {plan_shape_key(g) + (g.count,) for g in dag.gemms}
     if not heterogeneity_aware:
         by_id = {d.device_id: d for d in real_devices}
-        for p in plans.values():
+        for k in dag_keys:
+            p = plans[k]
             if p.instances is not None:
                 t = 0.0
                 for did, wi in p.instances.items():
@@ -116,10 +129,13 @@ def schedule(dag: GemmDag, devices: Sequence[cm.Device],
 
     dl, ul, mem = _accounting(dag, plans)
     comm = {k: dl.get(k, 0.0) + ul.get(k, 0.0) for k in dl}
-    excluded = set.intersection(*[set(p.excluded) for p in plans.values()]) \
-        if plans else set()
+    # restrict to this DAG's shapes: a shared plan_cache may hold more
+    dag_plans = {k: plans[k] for k in dag_keys}
+    excluded = set.intersection(*[set(p.excluded)
+                                  for p in dag_plans.values()]) \
+        if dag_plans else set()
     return SchedulePlan(
-        dag=dag, devices=list(devices), plans_by_shape=plans,
+        dag=dag, devices=list(devices), plans_by_shape=dag_plans,
         batch_time=batch_time, gemm_time=gemm_time, opt_tail=opt_tail,
         level_times=level_times, per_device_comm=comm, per_device_dl=dl,
         per_device_ul=ul, per_device_mem=mem, excluded=excluded)

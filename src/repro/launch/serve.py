@@ -22,7 +22,27 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--kv-int8", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--edge-plan", type=int, default=0, metavar="N",
+                    help="plan the forward-only (serve) GEMM DAG over an "
+                         "N-device edge fleet via CleaveRuntime and print "
+                         "the projected per-batch latency")
     args = ap.parse_args(argv)
+
+    if args.edge_plan > 0:
+        from repro.api import CleaveRuntime, Fleet, PlanRequest
+        rt_cfg_name = args.arch
+        rt = CleaveRuntime(arch=rt_cfg_name,
+                           fleet=Fleet.sample(args.edge_plan,
+                                              seed=args.seed),
+                           accounting="broadcast")
+        req = PlanRequest(batch=args.batch,
+                          seq=args.prompt_len + args.gen,
+                          backward=False)   # serve: forward pass only
+        rep = rt.plan(request=req)
+        print(f"edge serve plan ({args.edge_plan} devices): "
+              f"batch_time={rep.batch_time:.1f}s "
+              f"comm/dev={rep.per_device_comm / 1e6:.0f}MB "
+              f"mem/dev={rep.per_device_mem / 1e6:.0f}MB")
 
     import jax
     import jax.numpy as jnp

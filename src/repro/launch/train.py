@@ -37,6 +37,12 @@ def main(argv=None):
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--mesh", default=None, help="e.g. 2x2 (host devices)")
     ap.add_argument("--metrics-out", default=None)
+    ap.add_argument("--edge-plan", type=int, default=0, metavar="N",
+                    help="before training, plan this config's batch over an "
+                         "N-device edge fleet via the CleaveRuntime session "
+                         "API and print the projected batch time")
+    ap.add_argument("--edge-accounting", default="broadcast",
+                    choices=("unicast", "broadcast"))
     args = ap.parse_args(argv)
 
     import jax
@@ -60,6 +66,18 @@ def main(argv=None):
         over["vocab_size"] = args.vocab
     if over:
         cfg = dataclasses.replace(cfg, **over)
+
+    if args.edge_plan > 0:
+        from repro.api import CleaveRuntime, Fleet
+        rt = CleaveRuntime(arch=cfg, fleet=Fleet.sample(args.edge_plan,
+                                                        seed=args.seed),
+                           accounting=args.edge_accounting)
+        rep = rt.plan(batch=args.batch, seq=args.seq)
+        print(f"edge plan ({args.edge_plan} devices, "
+              f"{rep.accounting}): batch_time={rep.batch_time:.1f}s "
+              f"comm/dev={rep.per_device_comm / 1e6:.0f}MB "
+              f"mem/dev={rep.per_device_mem / 1e6:.0f}MB "
+              f"solved {rep.cache_misses} shapes in {rep.solve_time:.2f}s")
 
     rules = None
     if args.mesh:

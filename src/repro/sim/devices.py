@@ -8,11 +8,12 @@ The paper's median device: 6 TFLOPS, 55 MB/s DL, 7.5 MB/s UL, 512 MB usable.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Optional, Union
 
 import numpy as np
 
 from repro.core.cost_model import Device
+from repro.core.seeding import as_rng
 
 MEDIAN_DEVICE = dict(flops=6e12, dl_bw=55e6, ul_bw=7.5e6,
                      dl_lat=0.05, ul_lat=0.01, memory=512e6)
@@ -22,15 +23,16 @@ def median_fleet(n: int) -> List[Device]:
     return [Device(device_id=i, **MEDIAN_DEVICE) for i in range(n)]
 
 
-def sample_fleet(n: int, rng: Optional[np.random.Generator] = None,
+def sample_fleet(n: int, rng: Union[np.random.Generator, int, None] = None,
                  phone_fraction: float = 0.6,
                  straggler_fraction: float = 0.0,
                  straggler_slowdown: float = 10.0) -> List[Device]:
     """Heterogeneous fleet: `phone_fraction` phone-class (5-7 TFLOPS, 512 MB),
     rest laptop-class (15-27 TFLOPS, 10 GB).  Links sampled uniformly within
     the measured ranges.  Stragglers are `straggler_slowdown`x slower in both
-    compute and links (Fig. 6 setup)."""
-    rng = rng or np.random.default_rng(0)
+    compute and links (Fig. 6 setup).  `rng` may be a Generator or an int
+    seed (see :func:`as_rng`)."""
+    rng = as_rng(rng)
     devices = []
     n_straggler = int(round(straggler_fraction * n))
     for i in range(n):

@@ -3,21 +3,17 @@ baselines under the same latency accounting, runs the straggler / churn /
 scaling / ablation experiments, and applies the paper's matched-resource
 normalizations.
 
-Two communication accountings are provided for CLEAVE (see EXPERIMENTS.md
-§Paper-validation):
-  * "unicast"  — Eq. (3) taken literally: every device's row/column shard
-    crosses its own downlink (input replication factor ~2·sqrt(mq/D)·n per
-    GEMM).  Our default, conservative.
-  * "broadcast" — the §3.1 idealized accounting (each unique byte transmitted
-    once, multicast to the row/column group over shared access
-    infrastructure, matching the paper's MQTT/AMQP broadcast groups and its
-    published Table 8 arithmetic).
+The unicast/broadcast communication accountings live in
+``repro.api.accounting`` (strategy objects shared with the ``CleaveRuntime``
+session API); the experiments below all drive ``CleaveRuntime`` internally.
+``cleave_batch_time`` remains as a deprecated shim.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -38,37 +34,43 @@ class CleaveResult:
     plan: SchedulePlan
 
 
+def _cleave(cfg: ArchConfig, batch: int, seq: int,
+            devices: Sequence[cm.Device],
+            attention_scores: str = "ps",
+            accounting: str = "unicast",
+            heterogeneity_aware: bool = True) -> CleaveResult:
+    """Price one CLEAVE batch via the unified runtime (single shared path
+    for simulator, benchmarks, and examples)."""
+    from repro.api import CleaveRuntime, Fleet
+    rt = CleaveRuntime(arch=cfg, fleet=Fleet.from_devices(devices),
+                       accounting=accounting,
+                       attention_scores=attention_scores,
+                       heterogeneity_aware=heterogeneity_aware)
+    rep = rt.plan(batch, seq)
+    return CleaveResult(batch_time=rep.batch_time, gemm_time=rep.gemm_time,
+                        opt_tail=rep.opt_tail,
+                        per_device_comm=rep.per_device_comm,
+                        per_device_mem=rep.per_device_mem,
+                        plan=rep.schedule)
+
+
 def cleave_batch_time(cfg: ArchConfig, batch: int, seq: int,
                       devices: Sequence[cm.Device],
                       attention_scores: str = "ps",
                       accounting: str = "unicast",
                       heterogeneity_aware: bool = True,
                       use_ps: bool = True) -> CleaveResult:
-    dag = build_dag(cfg, batch, seq, attention_scores=attention_scores)
-    sp = schedule(dag, devices, heterogeneity_aware=heterogeneity_aware)
-    batch_time, gemm_time = sp.batch_time, sp.gemm_time
-    comm = sp.max_per_device_comm
-    if accounting == "broadcast":
-        # idealized §3.1: each unique input byte transmitted once; per-device
-        # DL time becomes its share of the aggregate unique volume.
-        scale = _broadcast_scale(dag, sp)
-        gemm_time = sp.opt_tail + (sp.gemm_time) * scale
-        batch_time = gemm_time + sp.opt_tail
-        comm *= scale
-    if not use_ps:
-        # Table 9 "w/o PS": peer-to-peer parameter broadcast + AllReduce —
-        # model the extra volume per the ablation's mechanism.
-        batch_time *= 1.0  # runtime recomputed by caller via alpa-style vol
-    return CleaveResult(batch_time=batch_time, gemm_time=gemm_time,
-                        opt_tail=sp.opt_tail, per_device_comm=comm,
-                        per_device_mem=sp.max_per_device_mem, plan=sp)
-
-
-def _broadcast_scale(dag: GemmDag, sp: SchedulePlan) -> float:
-    """Ratio of unique input bytes to unicast-replicated input bytes."""
-    unique = dag.total_in_bytes() + dag.total_out_bytes()
-    replicated = sum(sp.per_device_dl.values()) + sum(sp.per_device_ul.values())
-    return min(1.0, unique / max(replicated, 1.0))
+    """Deprecated shim: use ``repro.api.CleaveRuntime(...).plan(batch, seq)``
+    instead.  Results are unchanged."""
+    warnings.warn(
+        "cleave_batch_time is deprecated; use "
+        "repro.api.CleaveRuntime(...).plan(batch, seq)",
+        DeprecationWarning, stacklevel=2)
+    del use_ps  # kept for signature compatibility (Table 9 handled in
+    #             ablation() via the alpa-volume baseline)
+    return _cleave(cfg, batch, seq, devices,
+                   attention_scores=attention_scores, accounting=accounting,
+                   heterogeneity_aware=heterogeneity_aware)
 
 
 # ----------------------------------------------------------- experiments --
@@ -80,7 +82,7 @@ def compare_systems(arch: str, batch: int, seq: int, n_devices: int,
     devs = fleet_mod.median_fleet(n_devices)
     n_params = cfg.n_params()
     out = {"arch": arch, "devices": n_devices}
-    cl = cleave_batch_time(cfg, batch, seq, devs, accounting=accounting)
+    cl = _cleave(cfg, batch, seq, devs, accounting=accounting)
     out["cleave"] = cl.batch_time
     out["cleave_comm_mb"] = cl.per_device_comm / 1e6
     out["cleave_mem_mb"] = cl.per_device_mem / 1e6
@@ -115,7 +117,7 @@ def straggler_experiment(arch: str = "opt-13b", batch: int = 128,
         rng = np.random.default_rng(seed)
         devs = fleet_mod.sample_fleet(n_devices, rng,
                                       straggler_fraction=frac)
-        cl = cleave_batch_time(cfg, batch, seq, devs)
+        cl = _cleave(cfg, batch, seq, devs)
         al = baselines.alpa_batch_time(n_params, batch, seq, cfg.d_model,
                                        cfg.d_ff, cfg.n_layers, devs)
         try:
@@ -132,7 +134,7 @@ def straggler_experiment(arch: str = "opt-13b", batch: int = 128,
         # ideal: straggler work redistributed at infinitely fine granularity
         devs_ideal = [d for d in devs
                       if d.flops >= np.median([x.flops for x in devs]) / 5]
-        ideal = cleave_batch_time(cfg, batch, seq, devs_ideal).batch_time
+        ideal = _cleave(cfg, batch, seq, devs_ideal).batch_time
         row["ideal_norm"] = ideal / base["cleave"]
         rows.append(row)
     return rows
@@ -194,7 +196,7 @@ def ablation(arch: str = "llama2-13b", batch: int = 128, seq: int = 1024,
     devs = fleet_mod.sample_fleet(n_devices, rng)
     n_params = cfg.n_params()
 
-    full = cleave_batch_time(cfg, batch, seq, devs)
+    full = _cleave(cfg, batch, seq, devs)
     base = {"comm": full.per_device_comm, "mem": full.per_device_mem,
             "runtime": full.batch_time}
 
@@ -217,8 +219,8 @@ def ablation(arch: str = "llama2-13b", batch: int = 128, seq: int = 1024,
     mem_wo_ps = full.per_device_mem + 12.0 * n_params / n_devices
 
     # w/o heterogeneity awareness
-    wo_het = cleave_batch_time(cfg, batch, seq, devs,
-                               heterogeneity_aware=False)
+    wo_het = _cleave(cfg, batch, seq, devs,
+                     heterogeneity_aware=False)
 
     return {
         "cleave": base,
@@ -319,7 +321,7 @@ def memory_experiment(archs=("opt-1.3b", "opt-13b", "llama2-13b", "opt-66b",
         cfg = get_config(arch)
         n_params = cfg.n_params()
         devs = fleet_mod.median_fleet(min(n_candidates, 1024))
-        cl = cleave_batch_time(cfg, batch, seq, devs)
+        cl = _cleave(cfg, batch, seq, devs)
         row = {"arch": arch, "cleave_mb": cl.per_device_mem / 1e6}
         try:
             dt = baselines.dtfm_batch_time(

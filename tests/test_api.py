@@ -1,0 +1,301 @@
+"""The unified `CleaveRuntime` session API (plan → execute → recover →
+stream): plan-cache reuse across churn, mitigation-policy selection,
+accounting parity with the old `cleave_batch_time` path, deterministic
+seeding, and the full failure round trip with exact numerics."""
+import numpy as np
+import pytest
+
+from repro.api import (BroadcastAccounting, CleaveRuntime, CodedMitigation,
+                       Fleet, NoMitigation, PlanRequest,
+                       SpeculativeMitigation, UnicastAccounting,
+                       get_accounting, get_mitigation)
+from repro.configs.base import get_config
+from repro.core import cost_model as cm, executor
+from repro.core.gemm_dag import build_dag
+from repro.core.scheduler import schedule
+from repro.sim import simulator as S
+from repro.sim.devices import sample_fleet
+
+ARCH = "opt-13b"
+
+
+@pytest.fixture
+def rt():
+    return CleaveRuntime(arch=ARCH, fleet=Fleet.sample(24, seed=0))
+
+
+def _ab(rng, g):
+    A = rng.standard_normal((g.m, g.n)).astype(np.float32)
+    B = rng.standard_normal((g.n, g.q)).astype(np.float32)
+    return A, B
+
+
+# ------------------------------------------------------------- plan cache --
+
+def test_plan_cache_repeated_steps(rt):
+    r1 = rt.plan(16, 128)
+    assert r1.cache_misses > 0 and not r1.cached
+    r2 = rt.plan(16, 128)
+    assert r2.cached and r2.cache_misses == 0
+    assert r2.batch_time == r1.batch_time
+    assert r2.solve_time < r1.solve_time / 10
+
+
+def test_plan_cache_keyed_by_fleet_signature(rt):
+    r1 = rt.plan(16, 128)
+    sig1 = rt.fleet.signature()
+    rt.on_failure([rt.fleet.devices[0].device_id])
+    assert rt.fleet.signature() != sig1
+    r2 = rt.plan(16, 128)
+    assert r2.fleet_signature != r1.fleet_signature
+    # churn re-plan is warm: every count==1 shape was patched, not re-solved
+    assert r2.cache_hits > 0
+
+
+def test_plan_cache_reuse_across_churn_exact_numerics(rt):
+    rng = np.random.default_rng(1)
+    g = cm.GEMM(m=256, n=512, q=256)
+    plan = rt.plan_gemm(g)
+    victim = plan.assignments[0].device_id
+    report = rt.on_failure([victim])
+    assert report.n_plans_patched >= 1
+    assert victim not in [d.device_id for d in rt.fleet]
+    patched = rt.plan_gemm(g)
+    assert all(a.device_id != victim for a in patched.assignments)
+    # the patched plan is still an exact partition of the output
+    grid = np.zeros((g.m, g.q), int)
+    for a in patched.assignments:
+        grid[a.r0:a.r1, a.c0:a.c1] += 1
+    assert (grid == 1).all()
+    A, B = _ab(rng, g)
+    step = rt.execute_step(A, B, gemm=g)
+    assert step.plan_cached
+    np.testing.assert_allclose(step.output,
+                               A.astype(np.float64) @ B.astype(np.float64),
+                               rtol=1e-9, atol=1e-8)
+
+
+def test_churn_patches_heterogeneity_ablation_cache():
+    """heterogeneity_aware=False sessions get their cached plans patched
+    across churn too (not just the default het=True cache)."""
+    rt = CleaveRuntime(arch=ARCH, fleet=Fleet.sample(16, seed=0),
+                       heterogeneity_aware=False)
+    r1 = rt.plan(8, 64)
+    assert r1.cache_misses > 0
+    report = rt.on_failure([rt.fleet.devices[0].device_id])
+    assert report.n_plans_patched + report.n_plans_carried > 0
+    r2 = rt.plan(8, 64)
+    assert r2.cache_misses <= report.n_plans_dropped
+
+
+def test_plan_gemm_matches_schedule_for_batched_shapes():
+    """plan_gemm and plan() share one solver path, so a count>1 shape
+    cached by plan_gemm first yields the same batch_time as a cold plan."""
+    req = PlanRequest(batch=8, seq=64, attention_scores="devices")
+    fleet = Fleet.sample(16, seed=0)
+    b = CleaveRuntime(arch=ARCH, fleet=fleet)
+    rb = b.plan(request=req)
+    # a count>1 shape genuinely in this DAG (per-(batch,head) attention)
+    g = next(x for x in rb.schedule.dag.gemms if x.count > 1)
+    a = CleaveRuntime(arch=ARCH, fleet=fleet)
+    a.plan_gemm(g)                      # warm the shared shape cache first
+    ra = a.plan(request=req)
+    assert ra.cache_hits >= 1
+    assert ra.batch_time == pytest.approx(rb.batch_time, rel=1e-12)
+
+
+def test_history_is_compact(rt):
+    rng = np.random.default_rng(4)
+    g = cm.GEMM(m=64, n=128, q=64)
+    A, B = _ab(rng, g)
+    rt.plan(8, 64)
+    rt.execute_step(A, B, gemm=g)
+    rt.on_failure([rt.fleet.devices[0].device_id])
+    assert [h["event"] for h in rt.history] == \
+        ["plan", "execute_step", "on_failure"]
+    # event log stores summaries only — no arrays or plan objects pinned
+    for h in rt.history:
+        assert not any(isinstance(v, np.ndarray) for v in h.values())
+
+
+def test_on_join_changes_signature_and_replans(rt):
+    rt.plan(16, 128)
+    sig = rt.fleet.signature()
+    rt.on_join(cm.Device(flops=2e13, dl_bw=8e7, ul_bw=9e6))
+    assert rt.fleet.signature() != sig
+    r = rt.plan(16, 128)
+    assert r.cache_misses > 0   # new fleet: shapes re-solve cold
+
+
+# ----------------------------------------------------------- round trip ----
+
+def test_execute_fail_recover_verify_round_trip(rt):
+    """plan → execute_step with injected failures → recover → verify: the
+    output equals the monolithic product at every stage."""
+    rng = np.random.default_rng(2)
+    g = cm.GEMM(m=384, n=768, q=384)
+    plan = rt.plan_gemm(g)
+    victims = sorted({a.device_id for a in plan.assignments})[:2]
+    A, B = _ab(rng, g)
+    want = A.astype(np.float64) @ B.astype(np.float64)
+
+    step = rt.execute_step(A, B, gemm=g, fail_ids=victims)
+    np.testing.assert_allclose(step.output, want, rtol=1e-9, atol=1e-8)
+    assert step.verified and step.n_recovered > 0
+    assert step.recovery is not None
+
+    churn_report = rt.on_failure(victims)
+    assert churn_report.n_survivors == 24 - len(victims)
+
+    step2 = rt.execute_step(A, B, gemm=g)
+    np.testing.assert_allclose(step2.output, want, rtol=1e-9, atol=1e-8)
+    assert step2.verified and step2.n_recovered == 0
+
+
+def test_corruption_caught_by_freivalds(rt):
+    rng = np.random.default_rng(3)
+    g = cm.GEMM(m=128, n=256, q=128)
+    plan = rt.plan_gemm(g)
+    bad = plan.assignments[0].device_id
+    A, B = _ab(rng, g)
+    step = rt.execute_step(A, B, gemm=g, corrupt_ids=[bad])
+    assert not step.verified     # poisoning detected...
+    np.testing.assert_allclose(  # ...and healed by PS re-dispatch
+        step.output, A.astype(np.float64) @ B.astype(np.float64),
+        rtol=1e-9, atol=1e-8)
+
+
+# ------------------------------------------------------------- accounting --
+
+@pytest.mark.parametrize("accounting", ["unicast", "broadcast"])
+def test_accounting_parity_with_cleave_batch_time(accounting):
+    """The runtime and the deprecated shim price a batch identically, and
+    both match the raw engine + strategy math."""
+    cfg = get_config(ARCH)
+    devs = sample_fleet(16, np.random.default_rng(0))
+    rt = CleaveRuntime(arch=cfg, fleet=Fleet.from_devices(devs),
+                       accounting=accounting)
+    rep = rt.plan(8, 128)
+    with pytest.warns(DeprecationWarning):
+        old = S.cleave_batch_time(cfg, 8, 128, devs, accounting=accounting)
+    assert rep.batch_time == pytest.approx(old.batch_time, rel=1e-12)
+    assert rep.per_device_comm == pytest.approx(old.per_device_comm,
+                                                rel=1e-12)
+    assert rep.per_device_mem == pytest.approx(old.per_device_mem, rel=1e-12)
+    # engine-level cross-check
+    dag = build_dag(cfg, 8, 128, attention_scores="ps")
+    sp = schedule(dag, devs)
+    acc = get_accounting(accounting).apply(dag, sp)
+    assert rep.batch_time == pytest.approx(acc.batch_time, rel=1e-12)
+
+
+def test_accounting_registry():
+    assert isinstance(get_accounting("unicast"), UnicastAccounting)
+    assert isinstance(get_accounting("broadcast"), BroadcastAccounting)
+    strat = BroadcastAccounting()
+    assert get_accounting(strat) is strat
+    with pytest.raises(ValueError):
+        get_accounting("multicast")
+
+
+# -------------------------------------------------------------- mitigation --
+
+def test_mitigation_policy_selection():
+    assert isinstance(get_mitigation("none"), NoMitigation)
+    assert isinstance(get_mitigation(None), NoMitigation)
+    assert isinstance(get_mitigation("speculative"), SpeculativeMitigation)
+    assert isinstance(get_mitigation("coded"), CodedMitigation)
+    pol = CodedMitigation(k=32)
+    assert get_mitigation(pol) is pol
+    with pytest.raises(ValueError):
+        get_mitigation("prayer")
+
+
+def test_mitigation_applied_to_plan():
+    fleet = Fleet.sample(12, seed=0)
+    base = CleaveRuntime(arch=ARCH, fleet=fleet).plan(8, 128)
+    spec = CleaveRuntime(arch=ARCH, fleet=fleet,
+                         mitigation="speculative").plan(8, 128)
+    assert base.mitigation.policy == "none"
+    assert base.mitigation.expected_latency == base.batch_time
+    assert spec.mitigation.policy == "speculative"
+    assert spec.mitigation.redundancy >= 1.0
+    assert spec.mitigation.expected_latency <= spec.batch_time
+    coded = CodedMitigation(pareto_alpha=2.0, k=64)
+    rep = coded.mitigate(10.0)
+    assert rep.redundancy > 1.0 and np.isfinite(rep.expected_latency)
+
+
+def test_stream_profile(rt):
+    g = cm.GEMM(m=4096, n=1024, q=1024)
+    prof = rt.stream_profile(g, k=16, pareto_alpha=2.0)
+    assert prof.pipelined_time < prof.serial_time
+    assert prof.overlap_speedup > 1.0
+    assert prof.mitigation.base_latency == prof.jittered_time
+
+
+# ---------------------------------------------------------------- seeding --
+
+def test_deterministic_seeding():
+    """Same seed → bit-identical fleets and step outputs; different seed →
+    different fleet."""
+    a = CleaveRuntime(arch=ARCH, fleet=Fleet.sample(12, seed=7), seed=7)
+    b = CleaveRuntime(arch=ARCH, fleet=Fleet.sample(12, seed=7), seed=7)
+    c = CleaveRuntime(arch=ARCH, fleet=Fleet.sample(12, seed=8), seed=8)
+    assert a.fleet.signature() == b.fleet.signature()
+    assert a.fleet.signature() != c.fleet.signature()
+    g = cm.GEMM(m=64, n=128, q=64)
+    rng = np.random.default_rng(0)
+    A, B = _ab(rng, g)
+    sa = a.execute_step(A, B, gemm=g)
+    sb = b.execute_step(A, B, gemm=g)
+    assert np.array_equal(sa.output, sb.output)
+
+
+def test_sample_fleet_accepts_int_seed():
+    from repro.sim.devices import sample_fleet as sf
+    assert [d.as_row() for d in sf(8, 3)] == \
+        [d.as_row() for d in sf(8, np.random.default_rng(3))]
+
+
+def test_execute_plan_accepts_int_seed(rng):
+    g = cm.GEMM(m=64, n=128, q=64)
+    devs = sample_fleet(8, np.random.default_rng(0))
+    plan = cm.solve_gemm(g, devs)
+    A, B = _ab(rng, g)
+    r1 = executor.execute_plan(g, plan, A, B, devs, rng=5)
+    r2 = executor.execute_plan(g, plan, A, B, devs,
+                               rng=np.random.default_rng(5))
+    assert np.array_equal(r1.output, r2.output)
+
+
+# ------------------------------------------------------------ old entries --
+
+def test_old_entry_points_still_work(rng):
+    """`schedule` and `execute_plan` remain the engines and keep working
+    stand-alone with unchanged semantics."""
+    cfg = get_config(ARCH)
+    devs = sample_fleet(12, np.random.default_rng(0))
+    dag = build_dag(cfg, 8, 128, attention_scores="ps")
+    sp = schedule(dag, devs)
+    assert sp.batch_time > 0
+    g = cm.GEMM(m=128, n=256, q=128)
+    plan = cm.solve_gemm(g, devs)
+    A, B = _ab(rng, g)
+    rep = executor.execute_plan(g, plan, A, B, devs, rng=rng)
+    np.testing.assert_allclose(rep.output,
+                               A.astype(np.float64) @ B.astype(np.float64),
+                               rtol=1e-9, atol=1e-8)
+
+
+def test_plan_request_forward_only(rt):
+    """Serve-style planning: forward-only DAGs are smaller and faster."""
+    full = rt.plan(request=PlanRequest(batch=8, seq=128))
+    fwd = rt.plan(request=PlanRequest(batch=8, seq=128, backward=False))
+    assert len(fwd.schedule.dag.gemms) < len(full.schedule.dag.gemms)
+    assert fwd.batch_time < full.batch_time
+
+
+def test_plan_requires_shape(rt):
+    with pytest.raises(ValueError):
+        rt.plan()

@@ -1,7 +1,13 @@
-"""CLEAVE cost-model invariants (§4.1) — unit + hypothesis property tests."""
+"""CLEAVE cost-model invariants (§4.1) — unit + hypothesis property tests.
+
+The property-based tests need ``hypothesis`` (declared in the ``test``
+extra); on minimal installs they are skipped and the plain unit tests still
+run.
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import cost_model as cm
 from repro.sim.devices import median_fleet, sample_fleet

@@ -2,7 +2,7 @@
 multi-PS envelope and energy model (§6)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import streaming
 from repro.core.cost_model import GEMM, Device
