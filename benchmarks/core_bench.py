@@ -6,6 +6,10 @@ Also demonstrates the runtime's plan-cache amortization (Table 7): the
 second ``rt.plan()`` for the same shapes must be >=10x faster than the
 first (in practice it is a near-free memo hit).
 
+Tracks the discrete-event timeline engine too: one eventful simulation
+(fail + slowdown + jitter) per run, recording simulated events/sec and the
+deterministic event-vs-analytic agreement.
+
 Run:  PYTHONPATH=src python -m benchmarks.run --core
 """
 from __future__ import annotations
@@ -55,6 +59,35 @@ def bench_core(matrix=MATRIX) -> dict:
         "matrix": rows,
         "min_plan_cache_speedup_x": min_speedup,
         "plan_cache_ok": bool(min_speedup >= MIN_CACHE_SPEEDUP),
+        "event_engine": bench_event_engine(),
+    }
+
+
+def bench_event_engine(arch: str = "opt-13b", n_devices: int = 64,
+                       batch: int = 16, seq: int = 256) -> dict:
+    """Throughput of the discrete-event timeline engine: a deterministic
+    replay (must match the analytic batch time) plus an eventful one
+    (mid-batch failure + hidden slowdown + Pareto jitter)."""
+    from repro.api import CleaveRuntime, Fleet, fail, slowdown
+
+    rt = CleaveRuntime(arch=arch, fleet=Fleet.sample(n_devices, seed=0))
+    ana = rt.simulate(batch, seq, backend="analytic")
+    det = rt.simulate(batch, seq, backend="event")
+    victim = rt.fleet.devices[1].device_id
+    eventful = rt.simulate(
+        batch, seq, backend="event", jitter_alpha=2.0,
+        events=[fail(det.makespan * 0.3, victim),
+                slowdown(det.makespan * 0.1,
+                         rt.fleet.devices[2].device_id, 4.0)])
+    rel = abs(det.makespan - ana.makespan) / ana.makespan
+    return {
+        "arch": arch, "devices": n_devices, "batch": batch, "seq": seq,
+        "n_events": eventful.n_events,
+        "sim_wall_s": round(eventful.wall_time, 4),
+        "events_per_sec": round(eventful.events_per_sec),
+        "det_events_per_sec": round(det.events_per_sec),
+        "analytic_match_rel": rel,
+        "analytic_match_ok": bool(rel < 1e-6),
     }
 
 
@@ -74,11 +107,16 @@ def main(out_path: str = "BENCH_core.json") -> int:
               f"cold_plan={r['plan_solve_cold_s']}s "
               f"warm_plan={r['plan_solve_warm_s']}s "
               f"cache_speedup={r['plan_cache_speedup_x']}x")
-    ok = payload["plan_cache_ok"]
+    ee = payload["event_engine"]
+    print(f"event-engine: {ee['n_events']} events in {ee['sim_wall_s']}s "
+          f"({ee['events_per_sec']:,} ev/s), analytic match "
+          f"{'OK' if ee['analytic_match_ok'] else 'FAIL: event backend '}"
+          f"{'' if ee['analytic_match_ok'] else 'diverged from analytic'}")
+    cache_ok = payload["plan_cache_ok"]
     print(f"wrote {out_path}; min plan-cache speedup "
           f"{payload['min_plan_cache_speedup_x']}x "
-          f"({'OK' if ok else f'FAIL: need >={MIN_CACHE_SPEEDUP}x'})")
-    return 0 if ok else 1
+          f"({'OK' if cache_ok else f'FAIL: need >={MIN_CACHE_SPEEDUP}x'})")
+    return 0 if cache_ok and ee["analytic_match_ok"] else 1
 
 
 if __name__ == "__main__":

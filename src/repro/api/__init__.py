@@ -19,11 +19,14 @@ from repro.api.mitigation import (CodedMitigation, MitigationPolicy,
                                   SpeculativeMitigation, get_mitigation)
 from repro.api.runtime import (ChurnReport, CleaveRuntime, PlanReport,
                                PlanRequest, StepReport, StreamReport)
+from repro.sim.events import (FailEvent, JoinEvent, SlowdownEvent,
+                              TimelineReport, fail, join, slowdown)
 
 __all__ = [
     "AccountingResult", "AccountingStrategy", "BroadcastAccounting",
-    "ChurnReport", "CleaveRuntime", "CodedMitigation", "Fleet",
-    "MitigationPolicy", "MitigationReport", "NoMitigation", "PlanReport",
-    "PlanRequest", "SpeculativeMitigation", "StepReport", "StreamReport",
-    "UnicastAccounting", "get_accounting", "get_mitigation",
+    "ChurnReport", "CleaveRuntime", "CodedMitigation", "FailEvent", "Fleet",
+    "JoinEvent", "MitigationPolicy", "MitigationReport", "NoMitigation",
+    "PlanReport", "PlanRequest", "SlowdownEvent", "SpeculativeMitigation",
+    "StepReport", "StreamReport", "TimelineReport", "UnicastAccounting",
+    "fail", "get_accounting", "get_mitigation", "join", "slowdown",
 ]

@@ -5,11 +5,23 @@ path in ``core.streaming`` that callers wired up by hand; here they become a
 ``mitigation=`` policy the :class:`~repro.api.CleaveRuntime` applies to any
 latency it reports.  ``"none"`` is the identity policy, so the runtime can
 apply its policy unconditionally.
+
+Every policy answers twice:
+
+* :meth:`~MitigationPolicy.mitigate` — the closed-form order-statistic
+  expectation (Eq. 26-28);
+* :meth:`~MitigationPolicy.replay` — the same scheme *replayed* on the
+  discrete-event fleet engine as duplicate / erasure chains racing under
+  Pareto(α) jitter, converging to the formula as trials grow (tested).
+  The replay is what generalizes: it keeps working when the latency being
+  mitigated itself came from an event timeline with contention or churn.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Optional, Union
+
+import numpy as np
 
 from repro.core import streaming
 
@@ -21,6 +33,7 @@ class MitigationReport:
     expected_latency: float
     redundancy: float           # extra dispatched work factor (1.0 = none)
     pareto_alpha: float = 0.0
+    method: str = "analytic"    # "analytic" (Eq. 26-28) | "replay" (engine)
 
 
 class MitigationPolicy:
@@ -30,6 +43,19 @@ class MitigationPolicy:
 
     def mitigate(self, base_latency: float) -> MitigationReport:
         raise NotImplementedError
+
+    def replay(self, base_latency: float,
+               rng: Optional[np.random.Generator] = None,
+               n_trials: int = 200) -> MitigationReport:
+        """Event-engine Monte-Carlo replay of the policy (see module
+        docstring).  Default: identical to :meth:`mitigate`."""
+        rep = self.mitigate(base_latency)
+        return MitigationReport(policy=rep.policy,
+                                base_latency=rep.base_latency,
+                                expected_latency=rep.expected_latency,
+                                redundancy=rep.redundancy,
+                                pareto_alpha=rep.pareto_alpha,
+                                method="replay")
 
 
 class NoMitigation(MitigationPolicy):
@@ -61,6 +87,22 @@ class SpeculativeMitigation(MitigationPolicy):
                                 redundancy=out.redundancy_factor,
                                 pareto_alpha=self.pareto_alpha)
 
+    def replay(self, base_latency: float,
+               rng: Optional[np.random.Generator] = None,
+               n_trials: int = 200) -> MitigationReport:
+        """Race ``r`` duplicate chains per trial on the event engine; the
+        first response wins (Eq. 26 as events)."""
+        from repro.sim.engine import replay_speculative
+        expected = replay_speculative(base_latency, self.pareto_alpha,
+                                      self.r,
+                                      rng or np.random.default_rng(0),
+                                      n_trials=n_trials)
+        return MitigationReport(policy=self.name, base_latency=base_latency,
+                                expected_latency=expected,
+                                redundancy=float(self.r),
+                                pareto_alpha=self.pareto_alpha,
+                                method="replay")
+
 
 class CodedMitigation(MitigationPolicy):
     """(n, k) erasure-coded work groups: any k of n responses reconstruct
@@ -82,6 +124,21 @@ class CodedMitigation(MitigationPolicy):
                                 expected_latency=out.expected_latency,
                                 redundancy=out.redundancy_factor,
                                 pareto_alpha=self.pareto_alpha)
+
+    def replay(self, base_latency: float,
+               rng: Optional[np.random.Generator] = None,
+               n_trials: int = 200) -> MitigationReport:
+        """Run ``n`` erasure-coded chains per trial on the event engine; the
+        group completes at the k-th response (Eq. 28 as events)."""
+        from repro.sim.engine import replay_coded
+        expected = replay_coded(base_latency, self.pareto_alpha, self.k,
+                                self.n, rng or np.random.default_rng(0),
+                                n_trials=n_trials)
+        return MitigationReport(policy=self.name, base_latency=base_latency,
+                                expected_latency=expected,
+                                redundancy=self.n / self.k,
+                                pareto_alpha=self.pareto_alpha,
+                                method="replay")
 
 
 _REGISTRY = {

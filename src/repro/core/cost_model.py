@@ -124,6 +124,15 @@ def device_cost(gemm: GEMM, dev: Device, alpha: float, beta: float,
     return max(dl, ul, comp), dl, ul, comp
 
 
+def instance_time(gemm: GEMM, dev: Device) -> float:
+    """Streamed whole-instance service time: the slowest of DL / UL /
+    compute for one instance (per-transfer latency accounted once per
+    level, not here).  The single definition shared by the batched solver,
+    the scheduler's re-pricing, and the event engine's instance chains."""
+    return max(gemm.in_bytes / dev.dl_bw, gemm.out_bytes / dev.ul_bw,
+               gemm.flops / dev.flops)
+
+
 def plan_makespan(gemm: GEMM, devices: Sequence[Device], plan: Plan) -> float:
     t = 0.0
     dev_by_id = {d.device_id: d for d in devices}
@@ -331,10 +340,9 @@ def solve_batched(gemm: GEMM, devices: Sequence[Device],
     C = gemm.count
     inst_dl = gemm.in_bytes
     inst_ul = gemm.out_bytes
-    inst_fl = gemm.flops
 
     def inst_time(d: Device):
-        return max(inst_dl / d.dl_bw, inst_ul / d.ul_bw, inst_fl / d.flops)
+        return instance_time(gemm, d)
 
     fits = [d for d in devices
             if inst_dl + inst_ul <= d.memory]

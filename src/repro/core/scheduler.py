@@ -104,14 +104,17 @@ def schedule(dag: GemmDag, devices: Sequence[cm.Device],
                 t = 0.0
                 for did, wi in p.instances.items():
                     d = by_id[did]
-                    it = max(p.gemm.in_bytes / d.dl_bw,
-                             p.gemm.out_bytes / d.ul_bw,
-                             p.gemm.flops / d.flops)
-                    t = max(t, max(d.dl_lat, d.ul_lat) + wi * it)
+                    t = max(t, max(d.dl_lat, d.ul_lat)
+                            + wi * cm.instance_time(p.gemm, d))
                 p.makespan = t
             else:
                 p.makespan = cm.plan_makespan(p.gemm, real_devices, p) \
                     * p.n_split
+                if p.gemm.count > 1:
+                    # keep the count>1 wave multiplier the het-aware solve
+                    # applies (re-pricing used to silently drop it)
+                    p.makespan *= _wave_factor(p.gemm, p,
+                                               len(real_devices))
         devices = real_devices
 
     level_times = []

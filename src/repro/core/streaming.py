@@ -4,8 +4,9 @@ scheduler extensions (Appendix C.4).
 The PS streams row-column pairs to each device over parallel threads so DL,
 compute, and UL overlap (Eq. 9'): for k pairs,
     T_pipeline(k) = T_DL + (k-1)·max(T_DL, T_comp, T_UL) + T_comp + T_UL.
-An event-driven per-device timeline validates the closed form and produces
-the per-level utilization the §Perf narrative uses.
+``simulate_stream`` replays the pipeline on the discrete-event fleet engine
+(``repro.sim.engine``) — a thin single-device wrapper that matches the
+closed form exactly in the deterministic case (tested).
 
 Mitigations:
   * speculative execution — every pair dispatched to r devices, first
@@ -15,7 +16,6 @@ Mitigations:
 """
 from __future__ import annotations
 
-import heapq
 import math
 from dataclasses import dataclass
 from typing import List, Optional, Sequence
@@ -55,31 +55,30 @@ def simulate_stream(c: PairCost, k: int, dl_lat: float = 0.0,
                     ul_lat: float = 0.0,
                     jitter: Optional[np.random.Generator] = None,
                     pareto_alpha: float = 0.0) -> float:
-    """Event-driven three-stage pipeline (download / compute / upload with
-    one in flight per stage).  With `pareto_alpha > 0`, every stage time is
-    multiplied by a Pareto(α)/mean sample (Appendix C latencies).  Matches
+    """Three-stage pipeline (download / compute / upload with one in flight
+    per stage) replayed on the discrete-event fleet engine as a single
+    ``pipeline``-mode chain.  With a ``jitter`` RNG and ``pareto_alpha``,
+    every stage time is multiplied by a Pareto(α)/mean sample (Appendix C
+    latencies) — the α must then exceed 1 for a finite mean.  Matches
     Eq. (9') exactly in the deterministic case (tested)."""
-    def draw(base):
-        if jitter is None or pareto_alpha <= 1.0:
-            return base
-        mean = pareto_alpha / (pareto_alpha - 1.0)
-        return base * tail.pareto_sample(jitter, 1.0, pareto_alpha,
-                                         None) / mean
-
-    dl_free = dl_lat
-    comp_free = 0.0
-    ul_free = 0.0
-    done = 0.0
-    dl_end = [0.0] * k
-    comp_end = [0.0] * k
-    for i in range(k):
-        dl_end[i] = dl_free + draw(c.t_dl)
-        dl_free = dl_end[i]
-        comp_end[i] = max(comp_free, dl_end[i]) + draw(c.t_comp)
-        comp_free = comp_end[i]
-        done = max(ul_free, comp_end[i]) + draw(c.t_ul)
-        ul_free = done
-    return done + ul_lat   # single streamed connection: UL overhead once
+    if jitter is not None and pareto_alpha <= 1.0:
+        raise ValueError(
+            f"simulate_stream: pareto_alpha must be > 1 when a jitter RNG "
+            f"is provided (got {pareto_alpha}); omit the RNG for a "
+            f"deterministic stream")
+    if k <= 0:
+        return 0.0
+    # lazy import: core defines the closed forms, sim.engine replays them
+    from repro.sim.engine import TimelineEngine, WorkItem
+    dev = Device(flops=1.0, dl_bw=1.0, ul_bw=1.0, dl_lat=0.0, ul_lat=0.0,
+                 device_id=0)
+    eng = TimelineEngine(
+        [dev], rng=jitter,
+        jitter_alpha=pareto_alpha if jitter is not None else 0.0)
+    eng.add_chain(0, [WorkItem(dl_bytes=c.t_dl * k, flops=c.t_comp * k,
+                               ul_bytes=c.t_ul * k, mode="pipeline", k=k,
+                               dl_lat=dl_lat, ul_lat=ul_lat)])
+    return eng.run().makespan
 
 
 # -------------------------------------------------- speculative execution --
@@ -94,6 +93,7 @@ class SpeculativeOutcome:
 def speculative_latency(base_latency: float, pareto_alpha: float,
                         r: int) -> SpeculativeOutcome:
     """Replicate each pair to r devices, first responder wins (Eq. 26)."""
+    tail.require_alpha_gt1(pareto_alpha, "speculative_latency")
     mean = pareto_alpha / (pareto_alpha - 1.0)
     e_min = tail.replicated_min(1.0, pareto_alpha, r) / mean
     return SpeculativeOutcome(expected_latency=base_latency * e_min,
@@ -121,6 +121,7 @@ def coded_latency(base_latency: float, pareto_alpha: float, k: int,
     """(n, k) erasure-coded groups: makespan = k-th order statistic of n
     (Eq. 28), normalized by the mean so `base_latency` is the no-jitter
     time."""
+    tail.require_alpha_gt1(pareto_alpha, "coded_latency")
     mean = pareto_alpha / (pareto_alpha - 1.0)
     e_k = tail.coded_order_stat(1.0, pareto_alpha, k, n) / mean
     return CodedOutcome(expected_latency=base_latency * e_k,
@@ -130,6 +131,7 @@ def coded_latency(base_latency: float, pareto_alpha: float, k: int,
 def coded_design(k: int, pareto_alpha: float) -> int:
     """n - k = O(n^{1-1/α}) extra shards (App. C.4) — smallest n whose
     expected k-th order statistic is within 2x the scale parameter."""
+    tail.require_alpha_gt1(pareto_alpha, "coded_design")
     n = k
     while n < 4 * k:
         if tail.coded_order_stat(1.0, pareto_alpha, k, n) <= \

@@ -11,7 +11,19 @@ from scipy.special import gammaln
 
 # ------------------------------------------------------------------ Pareto --
 
+def require_alpha_gt1(alpha: float, what: str) -> None:
+    """Mean-based tail quantities need a finite-mean Pareto: α > 1.  The
+    mitigation formulas divide by (α − 1), so α ≤ 1 silently produced
+    negative/garbage latencies before this guard."""
+    if not alpha > 1.0:
+        raise ValueError(
+            f"{what}: pareto_alpha must be > 1 for a finite mean "
+            f"(got {alpha})")
+
+
 def pareto_sample(rng, x_m: float, alpha: float, size):
+    if not alpha > 0:
+        raise ValueError(f"pareto_sample: alpha must be > 0, got {alpha}")
     u = rng.uniform(size=size)
     return x_m / np.power(u, 1.0 / alpha)
 
@@ -49,9 +61,8 @@ def cvar(x_m: float, alpha: float, beta: float = 0.05) -> float:
 
 def replicated_min(x_m: float, alpha: float, r: int) -> float:
     """Eq. (26): E[min of r replicas] = x_m · rα/(rα−1) · r^{−1/α}."""
+    require_alpha_gt1(alpha, "replicated_min")
     ra = r * alpha
-    if ra <= 1:
-        return math.inf
     return x_m * ra / (ra - 1.0) * r ** (-1.0 / alpha)
 
 
@@ -66,7 +77,8 @@ def coded_order_stat(x_m: float, alpha: float, k: int, n: int) -> float:
     E = x_m · Γ(n+1)Γ(n−k+1−1/α) / (Γ(n−k+1)Γ(n+1−1/α)); the appendix's
     printed form garbles the Γ arguments (repro note).  Requires
     n−k+1 > 1/α for a finite mean."""
-    if alpha <= 1 or n - k + 1 <= 1 / alpha:
+    require_alpha_gt1(alpha, "coded_order_stat")
+    if n - k + 1 <= 1 / alpha:
         return math.inf
     return x_m * math.exp(gammaln(n + 1) + gammaln(n - k + 1 - 1 / alpha)
                           - gammaln(n - k + 1) - gammaln(n + 1 - 1 / alpha))

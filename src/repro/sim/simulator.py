@@ -153,7 +153,7 @@ def churn_experiment(arch: str = "opt-13b", batch: int = 128,
     plan = cm.solve_gemm(g, devs)
     victim = plan.assignments[len(plan.assignments) // 2].device_id
     event = churn.FailureEvent(gemm=g, failed_ids=[victim], plan=plan)
-    rec = churn.recover(event, [d for d in devs])
+    rec = churn.recover(event, devs)
     base = baselines.recovery_times(cfg.n_params(), batch, seq, cfg.d_model,
                                     cfg.n_layers, devs)
     out = {"cleave": rec.recovery_time + rec.solve_time,
@@ -242,7 +242,6 @@ def adaptive_experiment(arch: str = "opt-13b", batch: int = 128,
     scheduler keeps trusting registered capabilities; the Thompson-sampling
     scheduler learns the degradation from completion telemetry and shifts
     work away, then re-admits devices when they recover."""
-    import dataclasses
     from repro.core.bandit import ThompsonScheduler
 
     cfg = get_config(arch)
@@ -283,21 +282,12 @@ def adaptive_experiment(arch: str = "opt-13b", batch: int = 128,
 
 def _evaluate_on(plan: SchedulePlan, true_fleet) -> float:
     """Re-price a schedule's level times against the true capabilities
-    (the plan keeps its shard assignments; the fleet's real speeds pay)."""
-    by_id = {d.device_id: d for d in true_fleet}
-
-    def true_makespan(p):
-        if p.instances is not None:
-            mk = 0.0
-            for did, wi in p.instances.items():
-                d = by_id[did]
-                it = max(p.gemm.in_bytes / d.dl_bw,
-                         p.gemm.out_bytes / d.ul_bw,
-                         p.gemm.flops / d.flops)
-                mk = max(mk, max(d.dl_lat, d.ul_lat) + wi * it)
-            return mk
-        return cm.plan_makespan(p.gemm, true_fleet, p) * p.n_split
-
+    (the plan keeps its shard assignments; the fleet's real speeds pay).
+    Each unique shape's plan is replayed once through the discrete-event
+    engine — the same substrate that prices streaming, contention, and
+    churn — instead of a third copy of the closed-form level formulas."""
+    from repro.sim.engine import price_plan
+    n_pool = len(true_fleet)
     total = 0.0
     cache: dict = {}
     for level in plan.dag.levels():
@@ -305,7 +295,8 @@ def _evaluate_on(plan: SchedulePlan, true_fleet) -> float:
         for g in level:
             key = (g.m, g.n, g.q, g.b, g.count)
             if key not in cache:
-                cache[key] = true_makespan(plan.plans_by_shape[key])
+                cache[key] = price_plan(g, plan.plans_by_shape[key],
+                                        true_fleet, n_pool)
             t = max(t, cache[key])
         total += t
     return total + plan.opt_tail

@@ -1,0 +1,292 @@
+"""Discrete-event fleet timeline engine: deterministic equivalence with the
+closed-form accounting (Eq. 1/2/9'), event injection (fail/join/slowdown),
+PS link contention, churn-consistent recovery, and mitigation replays."""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.api import CleaveRuntime, Fleet, PlanRequest, fail, join, slowdown
+from repro.core import churn, cost_model as cm, streaming, tail
+from repro.core.scheduler import plan_shape_key
+from repro.sim import engine as eng_mod
+from repro.sim.events import validate_events
+
+
+@pytest.fixture
+def rt():
+    return CleaveRuntime(arch="opt-13b", fleet=Fleet.sample(16, seed=0))
+
+
+# ----------------------------------------------- deterministic equivalence --
+
+@pytest.mark.parametrize("arch,kw", [
+    ("opt-13b", {}),
+    ("llama2-13b", {}),
+    ("opt-13b", {"heterogeneity_aware": False}),
+    ("granite-moe-1b-a400m", {}),
+])
+def test_event_backend_matches_analytic(arch, kw):
+    """Acceptance: with no injected events and no jitter, backend='event'
+    batch times match the analytic accounting within 1e-6 relative."""
+    rt = CleaveRuntime(arch=arch, fleet=Fleet.sample(16, seed=0), **kw)
+    ana = rt.simulate(8, 64, backend="analytic")
+    ev = rt.simulate(8, 64, backend="event")
+    assert ev.makespan == pytest.approx(ana.makespan, rel=1e-6)
+    assert ev.gemm_time == pytest.approx(ana.gemm_time, rel=1e-6)
+    np.testing.assert_allclose(ev.level_times, ana.level_times, rtol=1e-6)
+    assert ev.n_events > 0 and ana.n_events == 0
+
+
+def test_event_backend_matches_analytic_device_attention():
+    """count>1 per-(batch,head) GEMMs (batched instances or sub-GEMM waves)
+    price identically on both backends."""
+    rt = CleaveRuntime(arch="opt-13b", fleet=Fleet.sample(16, seed=0),
+                       attention_scores="devices")
+    req = PlanRequest(batch=4, seq=64, attention_scores="devices")
+    ana = rt.simulate(request=req, backend="analytic")
+    ev = rt.simulate(request=req, backend="event")
+    assert ev.makespan == pytest.approx(ana.makespan, rel=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(dl=st.integers(1, 10 ** 6), comp=st.integers(1, 10 ** 6),
+       ul=st.integers(1, 10 ** 6), k=st.integers(1, 60),
+       lat=st.integers(0, 10 ** 4))
+def test_engine_pipeline_matches_eq9_prime(dl, comp, ul, k, lat):
+    """Property (satellite): the event engine reproduces pipeline_time
+    (Eq. 9') across randomized PairCost / k / latency."""
+    c = streaming.PairCost(t_dl=dl * 1e-6, t_comp=comp * 1e-6,
+                           t_ul=ul * 1e-6)
+    closed = streaming.pipeline_time(c, k, dl_lat=lat * 1e-6,
+                                     ul_lat=lat * 2e-6)
+    sim = streaming.simulate_stream(c, k, dl_lat=lat * 1e-6,
+                                    ul_lat=lat * 2e-6)
+    assert sim == pytest.approx(closed, rel=1e-9)
+
+
+# ------------------------------------------------------------ fail events --
+
+def test_mid_batch_fail_recovery_consistent_with_churn(rt):
+    """Acceptance: a mid-batch fail event produces a recovery latency
+    consistent with churn.recover patch makespans."""
+    sp = rt.plan(8, 64).schedule
+    level0 = sp.dag.levels()[0]
+    p0 = sp.plans_by_shape[plan_shape_key(level0[0]) + (level0[0].count,)]
+    victim = p0.assignments[0].device_id
+    rep = rt.simulate(8, 64, backend="event", events=[fail(1e-9, victim)])
+    assert rep.n_failures == 1
+    assert rep.recovery_latency > 0
+    assert rep.recomputed_fraction > 0
+    # reference: the §4.2 incremental re-solve of the orphaned rectangles
+    survivors = [d for d in rt.fleet.devices if d.device_id != victim]
+    rec = churn.recover(churn.FailureEvent(gemm=p0.gemm, failed_ids=[victim],
+                                           plan=p0), survivors)
+    assert rep.recovery_latency == pytest.approx(rec.recovery_time, rel=0.3)
+
+
+def test_fail_event_never_loses_work(rt):
+    """Every orphaned rectangle is recomputed: the simulated makespan stays
+    finite and the failed device does no work after its failure."""
+    base = rt.simulate(8, 64, backend="event")
+    victim = max(base.device_busy, key=base.device_busy.get)
+    rep = rt.simulate(8, 64, backend="event",
+                      events=[fail(base.makespan * 0.25, victim)])
+    assert np.isfinite(rep.makespan)
+    assert rep.device_busy.get(victim, 0.0) <= base.device_busy[victim]
+    # simulation is a what-if: the session fleet is untouched
+    assert victim in {d.device_id for d in rt.fleet.devices}
+
+
+def test_all_devices_failing_raises():
+    """Cascading failures end in a RuntimeError: either no survivors remain
+    or the shrinking fleet can no longer fit the re-solve (Eq. 7)."""
+    rt = CleaveRuntime(arch="opt-13b", fleet=Fleet.sample(12, seed=0))
+    ids = [d.device_id for d in rt.fleet.devices]
+    with pytest.raises(RuntimeError,
+                       match="no surviving devices|infeasible"):
+        rt.simulate(8, 64, backend="event",
+                    events=[fail(1e-9, i) for i in ids])
+
+
+# ---------------------------------------------------- join/slowdown events --
+
+def test_join_event_folds_in_at_next_level(rt):
+    base = rt.simulate(8, 64, backend="event")
+    fast = cm.Device(flops=5e13, dl_bw=2e8, ul_bw=5e7, device_id=99_999)
+    rep = rt.simulate(8, 64, backend="event",
+                      events=[join(base.makespan * 0.05, fast)])
+    assert rep.n_joins == 1
+    assert rep.makespan <= base.makespan * (1 + 1e-9)
+    assert len(rt.fleet) == 16     # what-if only
+
+
+def test_join_event_respects_heterogeneity_ablation():
+    """A het=False session re-solves post-join levels on the homogenized
+    fleet (Table 9 semantics), not silently heterogeneity-aware."""
+    rt = CleaveRuntime(arch="opt-13b", fleet=Fleet.sample(12, seed=0),
+                       heterogeneity_aware=False)
+    base = rt.simulate(8, 64, backend="event")
+    fast = cm.Device(flops=5e13, dl_bw=2e8, ul_bw=5e7, device_id=88_888)
+    rep = rt.simulate(8, 64, backend="event",
+                      events=[join(base.makespan * 0.05, fast)])
+    assert rep.n_joins == 1 and np.isfinite(rep.makespan)
+
+
+def test_fail_event_unknown_device_rejected(rt):
+    """A typo'd victim id must error, not silently price the baseline."""
+    with pytest.raises(ValueError, match="neither in the session fleet"):
+        rt.simulate(8, 64, backend="event", events=[fail(1.0, 9999)])
+    with pytest.raises(ValueError, match="neither in the session fleet"):
+        rt.simulate(8, 64, backend="event",
+                    events=[slowdown(1.0, 9999, 2.0)])
+    # ...but a device introduced by an earlier join event is fair game
+    dev = cm.Device(flops=1e13, dl_bw=1e8, ul_bw=1e7, device_id=77_777)
+    rep = rt.simulate(8, 64, backend="event",
+                      events=[join(0.5, dev), slowdown(1.0, 77_777, 2.0)])
+    assert rep.n_joins == 1
+
+
+def test_slowdown_event_degrades_and_recovers(rt):
+    base = rt.simulate(8, 64, backend="event")
+    victim = max(base.device_busy, key=base.device_busy.get)
+    slow = rt.simulate(8, 64, backend="event",
+                       events=[slowdown(0.0, victim, 8.0)])
+    assert slow.makespan > base.makespan
+    # a later 1/8 factor composes back to nominal speed
+    both = rt.simulate(8, 64, backend="event",
+                       events=[slowdown(0.0, victim, 8.0),
+                               slowdown(base.makespan * 0.5, victim,
+                                        1 / 8.0)])
+    assert base.makespan < both.makespan < slow.makespan
+
+
+# ------------------------------------------------------------- contention --
+
+def test_ps_saturation_at_large_fleets():
+    """A finite PS link queues transfers FIFO: the same schedule gets slower
+    and reports queueing; an unconstrained link reproduces the closed form."""
+    rt = CleaveRuntime(arch="opt-13b", fleet=Fleet.sample(64, seed=1),
+                       ps=cm.PSConfig(net_bw=2e8))
+    free = rt.simulate(8, 64, backend="event")
+    tight = rt.simulate(8, 64, backend="event", ps_contention=True)
+    assert tight.makespan > free.makespan
+    assert tight.ps_egress_wait > 0
+    ana = rt.simulate(8, 64, backend="analytic")
+    assert free.makespan == pytest.approx(ana.makespan, rel=1e-6)
+
+
+# ------------------------------------------------------------------ jitter --
+
+def test_jittered_timeline_slower_than_deterministic(rt):
+    det = rt.simulate(8, 64, backend="event")
+    jit = rt.simulate(8, 64, backend="event", jitter_alpha=1.5, seed=0)
+    assert jit.makespan > det.makespan   # tails expose pipeline bubbles
+
+
+# ------------------------------------------------------ mitigation replays --
+
+def test_speculative_replay_matches_min_order_statistic():
+    """Racing r duplicates converges to the exact E[min of r Pareto(α)]
+    (mean-normalized); more duplicates help monotonically."""
+    rng = np.random.default_rng(0)
+    alpha, base = 3.0, 10.0
+    mean = alpha / (alpha - 1.0)
+    got = {r: eng_mod.replay_speculative(base, alpha, r, rng, n_trials=300)
+           for r in (1, 3)}
+    for r in (1, 3):
+        exact = base * (r * alpha) / (r * alpha - 1.0) / mean
+        assert got[r] == pytest.approx(exact, rel=0.15), r
+    assert got[3] < got[1]
+
+
+def test_coded_replay_matches_order_statistic():
+    rng = np.random.default_rng(1)
+    alpha, base, k, n = 3.0, 10.0, 16, 24
+    got = eng_mod.replay_coded(base, alpha, k, n, rng, n_trials=300)
+    want = streaming.coded_latency(base, alpha, k, n).expected_latency
+    assert got == pytest.approx(want, rel=0.15)
+
+
+def test_mitigation_policy_replay_api():
+    from repro.api import CodedMitigation, NoMitigation, SpeculativeMitigation
+    rng = np.random.default_rng(2)
+    rep = SpeculativeMitigation(pareto_alpha=3.0, r=2).replay(5.0, rng=rng,
+                                                              n_trials=50)
+    assert rep.method == "replay" and rep.expected_latency < 5.0 * 1.6
+    rep = CodedMitigation(pareto_alpha=3.0, k=8, n=12).replay(5.0, rng=rng,
+                                                              n_trials=50)
+    assert rep.method == "replay" and np.isfinite(rep.expected_latency)
+    rep = NoMitigation().replay(5.0)
+    assert rep.expected_latency == 5.0 and rep.method == "replay"
+
+
+# -------------------------------------------------------------- validation --
+
+def test_analytic_backend_rejects_events(rt):
+    with pytest.raises(ValueError, match="analytic"):
+        rt.simulate(8, 64, backend="analytic", events=[fail(1.0, 0)])
+    with pytest.raises(ValueError, match="analytic"):
+        rt.simulate(8, 64, backend="analytic", jitter_alpha=2.0)
+    with pytest.raises(ValueError, match="backend"):
+        rt.simulate(8, 64, backend="quantum")
+    with pytest.raises(ValueError):
+        rt.simulate()
+
+
+def test_event_validation():
+    with pytest.raises(TypeError, match="timeline event"):
+        validate_events(["fail at 3"])
+    with pytest.raises(ValueError, match=">= 0"):
+        validate_events([fail(-1.0, 0)])
+    with pytest.raises(ValueError, match="positive"):
+        slowdown(0.0, 0, factor=0.0)
+    evs = validate_events([fail(2.0, 1), fail(1.0, 0)])
+    assert [e.t for e in evs] == [1.0, 2.0]
+
+
+def test_pareto_alpha_validation():
+    """Satellite: mean-based tail/mitigation entry points reject α <= 1
+    instead of silently producing garbage."""
+    with pytest.raises(ValueError, match="pareto_alpha"):
+        streaming.speculative_latency(1.0, 1.0, 3)
+    with pytest.raises(ValueError, match="pareto_alpha"):
+        streaming.coded_latency(1.0, 0.5, 8, 12)
+    with pytest.raises(ValueError, match="pareto_alpha"):
+        streaming.coded_design(8, 1.0)
+    with pytest.raises(ValueError, match="pareto_alpha"):
+        tail.replicated_min(1.0, 1.0, 2)
+    with pytest.raises(ValueError, match="pareto_alpha"):
+        tail.coded_order_stat(1.0, 0.9, 4, 8)
+    with pytest.raises(ValueError, match="jitter_alpha"):
+        eng_mod.TimelineEngine([cm.Device(flops=1e12, dl_bw=1e6,
+                                          ul_bw=1e6)], jitter_alpha=0.5)
+
+
+# ------------------------------------------------------------ engine misc --
+
+def test_raw_engine_default_repair():
+    """Untagged work (no plan structure) falls back to greedy least-loaded
+    redistribution on failure."""
+    devs = [cm.Device(flops=1e12, dl_bw=1e8, ul_bw=1e8, dl_lat=0.0,
+                      ul_lat=0.0, device_id=i) for i in range(3)]
+    eng = eng_mod.TimelineEngine(devs, events=[fail(0.5, 0)])
+    for i in range(3):
+        eng.add_chain(i, [eng_mod.WorkItem(dl_bytes=0.0, flops=1e12,
+                                           ul_bytes=0.0)])
+    rep = eng.run()
+    # device 0 fails mid-item; a survivor redoes the full 1 s item as a
+    # concurrent chain starting at the failure time (streaming overlap)
+    assert rep.makespan == pytest.approx(1.5, rel=1e-9)
+    assert rep.n_failures == 1
+    assert rep.recovery_latency == pytest.approx(1.0, rel=1e-9)
+
+
+def test_report_bookkeeping(rt):
+    rep = rt.simulate(8, 64, backend="event", trace=True)
+    assert rep.trace is not None and len(rep.trace) > 0
+    assert rep.n_items > 0 and rep.n_events >= rep.n_items
+    assert rep.events_per_sec > 0
+    assert sum(rep.level_times) == pytest.approx(rep.gemm_time, rel=1e-9)
+    busiest = max(rep.device_busy, key=rep.device_busy.get)
+    assert 0 < rep.utilization(busiest)
+    assert rt.history[-1]["event"] == "simulate"

@@ -23,6 +23,7 @@ def test_diloco_outer_step_moves_toward_groups():
     assert float(new["w"][0]) > 0.0
 
 
+@pytest.mark.slow
 def test_diloco_training_converges():
     """2 groups x H inner steps + outer Nesterov reduce loss on the
     synthetic corpus (accuracy-for-communication trade, §2.4)."""
@@ -90,6 +91,7 @@ def test_thompson_explores_uncertain_devices():
     assert np.std(samples) > 0   # posterior spread -> varying allocations
 
 
+@pytest.mark.slow
 def test_adaptive_scheduler_learns_and_readmits():
     """§6 adaptation: Thompson scheduling beats the static plan during a
     hidden degradation phase and re-converges to it on recovery."""

@@ -1,4 +1,9 @@
-"""Simulator behaviour vs the paper's claims (§5)."""
+"""Simulator behaviour vs the paper's claims (§5).
+
+The multi-minute experiment drivers are marked ``slow`` and run in the
+scheduled full CI job; the tier-1 fast path deselects them
+(``-m "not slow"``).
+"""
 import numpy as np
 import pytest
 
@@ -21,6 +26,7 @@ def test_dtfm_matches_paper_table8():
     assert abs(est.batch_time - 3466.7) / 3466.7 < 0.1
 
 
+@pytest.mark.slow
 def test_cleave_faster_than_baselines_in_shared_range():
     """Fig 3 ordering at 32-512 devices: CLEAVE < DTFM < Alpa."""
     row = S.compare_systems("llama2-13b", 128, 1024, 512)
@@ -29,6 +35,7 @@ def test_cleave_faster_than_baselines_in_shared_range():
     assert row64["cleave"] < row64["dtfm"]
 
 
+@pytest.mark.slow
 def test_strong_scaling_direction():
     """Fig 8: CLEAVE runtime falls with more devices; DTFM roughly flat."""
     rows = S.scaling_devices(counts=(32, 128, 512))
@@ -39,6 +46,7 @@ def test_strong_scaling_direction():
     assert max(dtfm) / min(dtfm) < 2.0          # comm-bound, ~constant
 
 
+@pytest.mark.slow
 def test_memory_capped_at_device_limit():
     """Fig 5: CLEAVE per-device memory stays near the 512 MB phone cap even
     for 70B models; DTFM/Alpa grow with model size."""
@@ -81,6 +89,7 @@ def test_churn_solve_time_seconds():
     assert out["cleave_solve"] < 5.0
 
 
+@pytest.mark.slow
 def test_ablation_directions():
     """Table 9: removing TP / PS / heterogeneity-awareness hurts."""
     out = S.ablation(n_devices=256)
@@ -97,6 +106,7 @@ def test_mtbf():
     assert mtbf_minutes(1024) < 6
 
 
+@pytest.mark.slow
 def test_scaling_to_thousands():
     """Beyond the baselines' range: CLEAVE schedules 2048 devices."""
     row = S.compare_systems("llama2-70b", 128, 1024, 2048)

@@ -77,6 +77,29 @@ def test_multi_ps_envelope():
     assert big.per_ps_demand_gbps <= 25.0
 
 
+def test_multi_ps_demand_exactly_at_capacity():
+    """Boundary: aggregate demand equal to ps_capacity_bps still fits one
+    PS (the envelope is inclusive); one device more tips into scale-out."""
+    cap = 25e9
+    # 1000 devices x 2.5e8 B/s x 0.1 overlap = 2.5e10 = cap exactly
+    at = streaming.multi_ps_plan(1000, 2.5e8, ps_capacity_bps=cap)
+    assert at.n_ps == 1
+    assert at.within_envelope
+    assert at.per_ps_demand_gbps == pytest.approx(25.0)
+    over = streaming.multi_ps_plan(1001, 2.5e8, ps_capacity_bps=cap)
+    assert over.n_ps == 2 and over.within_envelope
+    assert over.per_ps_devices == 501
+
+
+def test_multi_ps_single_device_fleet():
+    """Boundary: a 1-device fleet needs exactly one PS and trivially fits."""
+    one = streaming.multi_ps_plan(1, 55e6)
+    assert one.n_ps == 1
+    assert one.per_ps_devices == 1
+    assert one.within_envelope
+    assert one.per_ps_demand_gbps == pytest.approx(55e6 * 0.1 / 1e9)
+
+
 def test_energy_model_matches_paper_band():
     """§6 companion analysis: 1.5-5x energy advantage, 3.5-6x carbon."""
     est = streaming.energy_comparison(total_flops=1e19, n_devices=512,
