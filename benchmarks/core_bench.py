@@ -29,7 +29,7 @@ MATRIX = (
 MIN_CACHE_SPEEDUP = 10.0
 
 
-def bench_core(matrix=MATRIX) -> dict:
+def bench_core(matrix=MATRIX, include_kernels: bool = False) -> dict:
     from repro.api import CleaveRuntime, Fleet
 
     rows = []
@@ -52,7 +52,7 @@ def bench_core(matrix=MATRIX) -> dict:
             "unique_shapes": cold.cache_misses,
         })
     min_speedup = min(r["plan_cache_speedup_x"] for r in rows)
-    return {
+    payload = {
         "bench": "core",
         "created_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "python": platform.python_version(),
@@ -60,7 +60,74 @@ def bench_core(matrix=MATRIX) -> dict:
         "min_plan_cache_speedup_x": min_speedup,
         "plan_cache_ok": bool(min_speedup >= MIN_CACHE_SPEEDUP),
         "event_engine": bench_event_engine(),
+        "executor": bench_executor(),
     }
+    if include_kernels:
+        payload["kernels"] = bench_kernel_rows()
+    return payload
+
+
+# (m, n, q, n_devices) — executor throughput shapes; stable across PRs.
+# MXU-scale rectangles (>=256 per side) so the batched kernel grid is
+# compute-bound rather than padding-bound.
+EXECUTOR_SHAPES = (
+    (1024, 2048, 1024, 16),
+    (2048, 2048, 512, 16),
+)
+
+
+def bench_executor(shapes=EXECUTOR_SHAPES, reps: int = 3) -> dict:
+    """Per-backend executor throughput: the same solved plan's rectangles
+    run through the numpy (f64 host) executor and the jax executor
+    (compiled path — XLA on CPU, Pallas grid on TPU), GFLOP/s and tasks/s
+    each.  verify=False so the number is pure schedule execution, not
+    Freivalds overhead (which is identical numpy work for both)."""
+    import numpy as np
+
+    from repro.api import CleaveRuntime, Fleet
+    from repro.core import cost_model as cm
+
+    rows = []
+    for m, n, q, n_dev in shapes:
+        rt = CleaveRuntime(arch="opt-13b", fleet=Fleet.sample(n_dev, seed=0))
+        g = cm.GEMM(m=m, n=n, q=q)
+        rng = np.random.default_rng(0)
+        A = rng.standard_normal((m, n)).astype(np.float32)
+        B = rng.standard_normal((n, q)).astype(np.float32)
+        flops = 2.0 * m * n * q
+        row = {"m": m, "n": n, "q": q, "devices": n_dev}
+        for backend in ("numpy", "jax"):
+            rt.execute_step(A, B, gemm=g, backend=backend,
+                            verify=False)          # warm plan cache + jit
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                step = rt.execute_step(A, B, gemm=g, backend=backend,
+                                       verify=False)
+            dt = (time.perf_counter() - t0) / reps
+            row[backend] = {
+                "exec_s": round(dt, 5),
+                "gflops": round(flops / dt / 1e9, 2),
+                "tasks_per_s": round(step.n_tasks / dt, 1),
+            }
+        row["jax_vs_numpy_x"] = round(
+            row["jax"]["gflops"] / max(row["numpy"]["gflops"], 1e-9), 2)
+        rows.append(row)
+    min_x = min(r["jax_vs_numpy_x"] for r in rows)
+    return {
+        "shapes": rows,
+        "min_jax_vs_numpy_x": min_x,
+        "jax_ge_numpy": bool(min_x >= 1.0),
+    }
+
+
+def bench_kernel_rows() -> list:
+    """The kernel microbench rows (``benchmarks.kernels_bench``) folded
+    into the core payload — the nightly job tracks kernel + executor
+    throughput alongside events/sec."""
+    from benchmarks.kernels_bench import bench_kernels
+    return [{"name": name, "us_per_call": round(sec * 1e6, 1),
+             "derived": derived}
+            for name, sec, derived in bench_kernels()]
 
 
 def bench_event_engine(arch: str = "opt-13b", n_devices: int = 64,
@@ -92,15 +159,16 @@ def bench_event_engine(arch: str = "opt-13b", n_devices: int = 64,
 
 
 def write_bench_core(out_path: str = "BENCH_core.json",
-                     matrix=MATRIX) -> dict:
-    payload = bench_core(matrix)
+                     matrix=MATRIX, include_kernels: bool = False) -> dict:
+    payload = bench_core(matrix, include_kernels=include_kernels)
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=1)
     return payload
 
 
-def main(out_path: str = "BENCH_core.json") -> int:
-    payload = write_bench_core(out_path)
+def main(out_path: str = "BENCH_core.json",
+         include_kernels: bool = False) -> int:
+    payload = write_bench_core(out_path, include_kernels=include_kernels)
     for r in payload["matrix"]:
         print(f"core/{r['arch']}/D={r['devices']}: "
               f"batch={r['batch_time_s']}s "
@@ -112,10 +180,23 @@ def main(out_path: str = "BENCH_core.json") -> int:
           f"({ee['events_per_sec']:,} ev/s), analytic match "
           f"{'OK' if ee['analytic_match_ok'] else 'FAIL: event backend '}"
           f"{'' if ee['analytic_match_ok'] else 'diverged from analytic'}")
+    ex = payload["executor"]
+    for r in ex["shapes"]:
+        print(f"executor/{r['m']}x{r['n']}x{r['q']}/D={r['devices']}: "
+              f"numpy={r['numpy']['gflops']} GF/s "
+              f"jax={r['jax']['gflops']} GF/s "
+              f"({r['jax_vs_numpy_x']}x)")
+    for k in payload.get("kernels", []):
+        print(f"{k['name']}: {k['us_per_call']}us")
     cache_ok = payload["plan_cache_ok"]
+    exec_ok = ex["jax_ge_numpy"]
+    # jax>=numpy is recorded + reported but not an exit gate: a few-percent
+    # timing margin on a noisy shared runner must not fail unrelated pushes
     print(f"wrote {out_path}; min plan-cache speedup "
           f"{payload['min_plan_cache_speedup_x']}x "
-          f"({'OK' if cache_ok else f'FAIL: need >={MIN_CACHE_SPEEDUP}x'})")
+          f"({'OK' if cache_ok else f'FAIL: need >={MIN_CACHE_SPEEDUP}x'}); "
+          f"executor jax>=numpy "
+          f"({'OK' if exec_ok else 'WARN: jax slower than numpy this run'})")
     return 0 if cache_ok and ee["analytic_match_ok"] else 1
 
 

@@ -21,13 +21,18 @@ def main() -> None:
     ap.add_argument("--out", default=None)
     ap.add_argument("--core", action="store_true",
                     help="run only the core perf tracker and write "
-                         "BENCH_core.json")
+                         "BENCH_core.json (plan cache, event engine, "
+                         "per-backend executor throughput)")
+    ap.add_argument("--core-kernels", action="store_true",
+                    help="with --core: also fold the kernel microbench "
+                         "rows into BENCH_core.json (nightly job)")
     ap.add_argument("--core-out", default="BENCH_core.json")
     args = ap.parse_args()
 
-    if args.core:
+    if args.core or args.core_kernels:
         from benchmarks.core_bench import main as core_main
-        sys.exit(core_main(args.core_out))
+        sys.exit(core_main(args.core_out,
+                           include_kernels=args.core_kernels))
 
     from benchmarks import paper_figures
     fns = list(paper_figures.ALL)

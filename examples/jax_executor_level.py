@@ -1,0 +1,68 @@
+"""Execute one GemmDag level on the JAX/Pallas fleet executor.
+
+The session plans a (tiny) batch, takes the first DAG level — mutually
+independent GEMMs (Eq. 1) — and actually runs it through the batched
+Pallas ``block_gemm`` kernel grid (``backend="jax"``): per-rectangle tile
+gathering, MXU-aligned padding, bf16-compute/f32-accumulate on TPU
+(f32/f32 + interpret parity on CPU), with the same Freivalds verification
+and churn-recovery semantics as the numpy stand-in.  The report pairs the
+measured wall time with the event engine's ``price_plan`` prediction for
+the same level, and a mid-level device failure shows the recovery path
+producing the exact same numbers.
+
+Run:  PYTHONPATH=src python examples/jax_executor_level.py
+"""
+import numpy as np
+
+from repro.api import CleaveRuntime, Fleet
+from repro.configs.base import get_config
+
+# small reduced arch so the level's operands fit a laptop comfortably
+cfg = get_config("opt-13b").reduced(n_layers=1, vocab_size=256)
+rt = CleaveRuntime(arch=cfg, fleet=Fleet.sample(16, seed=0))
+
+report = rt.plan(batch=2, seq=32)
+level = report.schedule.dag.levels()[0]
+print(f"level 0: {[g.name for g in level]}")
+
+rng = np.random.default_rng(0)
+
+
+def operands(g):
+    A = rng.standard_normal((g.m, g.n)).astype(np.float32)
+    B = rng.standard_normal((g.n, g.q)).astype(np.float32)
+    return A, B
+
+
+pairs = [operands(g) for g in level]
+
+# 1. the level on the jax backend (Pallas grid on TPU, XLA batched dot on
+#    CPU; pass kernel="pallas" to force interpret-mode Pallas off-TPU)
+lev = rt.execute_level(pairs, gemms=level, backend="jax")
+print(f"jax backend: {lev.n_tasks} sub-GEMM tasks, "
+      f"verified={lev.verified}, wall={lev.level_time * 1000:.0f}ms, "
+      f"engine-priced makespan={lev.predicted_makespan:.2f}s")
+
+# 2. same level on the numpy stand-in: same numbers (<=1e-5 relative)
+lev_np = rt.execute_level(pairs, gemms=level, backend="numpy")
+worst = max(
+    float(np.max(np.abs(a.output - b.output)) / np.max(np.abs(b.output)))
+    for a, b in zip(lev.steps, lev_np.steps))
+print(f"numpy parity: worst relative deviation {worst:.2e}")
+
+# 3. survive a mid-level failure on the jax backend: the failed device's
+#    rectangles are re-solved over survivors and the output is still exact
+victim = lev.steps[0].plan.assignments[0].device_id
+step = rt.execute_step(*pairs[0], gemm=level[0], backend="jax",
+                       fail_ids=[victim])
+A, B = pairs[0]
+want = A.astype(np.float64) @ B.astype(np.float64)
+err = float(np.max(np.abs(step.output - want)) / np.max(np.abs(want)))
+print(f"failure round trip: {step.n_recovered} recovered tasks, "
+      f"relative error {err:.2e}")
+
+# 4. or walk the whole (truncated) DAG on the jax backend
+batch = rt.execute_batch(2, 32, backend="jax", max_levels=4, seed=1)
+print(f"batch walk: {batch.n_levels} levels, {batch.n_tasks} tasks, "
+      f"verified={batch.verified}, "
+      f"predicted gemm time {batch.predicted_gemm_time:.2f}s")

@@ -17,16 +17,18 @@ from repro.api.fleet import Fleet
 from repro.api.mitigation import (CodedMitigation, MitigationPolicy,
                                   MitigationReport, NoMitigation,
                                   SpeculativeMitigation, get_mitigation)
-from repro.api.runtime import (ChurnReport, CleaveRuntime, PlanReport,
+from repro.api.runtime import (BatchExecuteReport, ChurnReport,
+                               CleaveRuntime, LevelReport, PlanReport,
                                PlanRequest, StepReport, StreamReport)
 from repro.sim.events import (FailEvent, JoinEvent, SlowdownEvent,
                               TimelineReport, fail, join, slowdown)
 
 __all__ = [
-    "AccountingResult", "AccountingStrategy", "BroadcastAccounting",
-    "ChurnReport", "CleaveRuntime", "CodedMitigation", "FailEvent", "Fleet",
-    "JoinEvent", "MitigationPolicy", "MitigationReport", "NoMitigation",
-    "PlanReport", "PlanRequest", "SlowdownEvent", "SpeculativeMitigation",
-    "StepReport", "StreamReport", "TimelineReport", "UnicastAccounting",
-    "fail", "get_accounting", "get_mitigation", "join", "slowdown",
+    "AccountingResult", "AccountingStrategy", "BatchExecuteReport",
+    "BroadcastAccounting", "ChurnReport", "CleaveRuntime", "CodedMitigation",
+    "FailEvent", "Fleet", "JoinEvent", "LevelReport", "MitigationPolicy",
+    "MitigationReport", "NoMitigation", "PlanReport", "PlanRequest",
+    "SlowdownEvent", "SpeculativeMitigation", "StepReport", "StreamReport",
+    "TimelineReport", "UnicastAccounting", "fail", "get_accounting",
+    "get_mitigation", "join", "slowdown",
 ]

@@ -41,8 +41,8 @@ import numpy as np
 from repro.configs.base import get_config
 from repro.core import churn, cost_model as cm, executor
 from repro.core.gemm_dag import GemmDag, build_dag
-from repro.core.scheduler import (SchedulePlan, plan_shape_key, schedule,
-                                  solve_level_gemm)
+from repro.core.scheduler import (SchedulePlan, _homogenize, plan_shape_key,
+                                  reprice_plan, schedule, solve_level_gemm)
 from repro.api.accounting import (AccountingResult, AccountingStrategy,
                                   get_accounting)
 from repro.api.fleet import Fleet
@@ -100,6 +100,45 @@ class StepReport:
     recovery: Optional[churn.RecoveryResult]
     exec_time: float
     plan_cached: bool
+    backend: str = "numpy"      # 'numpy' | 'jax'
+    kernel: str = ""            # jax backend: resolved 'pallas' | 'xla'
+    gflops: float = 0.0         # jax backend: achieved kernel GFLOP/s
+
+
+@dataclass
+class LevelReport:
+    """Result of :meth:`CleaveRuntime.execute_level`: one GemmDag level —
+    mutually independent GEMMs — executed on the fleet backend, with the
+    event engine's plan pricing as the predicted level latency."""
+    steps: List[StepReport]
+    backend: str
+    level_time: float           # wall-clock of executing the level
+    predicted_makespan: float   # engine.price_plan max over the level
+    verified: bool
+    n_tasks: int
+    n_recovered: int
+
+    @property
+    def outputs(self) -> List[np.ndarray]:
+        return [s.output for s in self.steps]
+
+
+@dataclass
+class BatchExecuteReport:
+    """Result of :meth:`CleaveRuntime.execute_batch`: a DAG level walk
+    executed for real, level by level (§3.2's schedule actually run)."""
+    request: PlanRequest
+    backend: str
+    levels: List[LevelReport]
+    wall_time: float
+    predicted_gemm_time: float  # sum of engine-priced level makespans
+    verified: bool
+    n_tasks: int
+    n_recovered: int
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.levels)
 
 
 @dataclass
@@ -223,29 +262,168 @@ class CleaveRuntime:
                      gemm: Optional[cm.GEMM] = None,
                      fail_ids: Sequence[int] = (),
                      corrupt_ids: Sequence[int] = (),
-                     verify: bool = True) -> StepReport:
+                     verify: bool = True,
+                     backend: str = "numpy",
+                     dtype_policy=None,
+                     kernel: str = "auto") -> StepReport:
         """Numerically execute one GEMM's plan on the fleet.  Devices in
         ``fail_ids`` vanish mid-level (in-flight recovery via
         ``churn.recover``); ``corrupt_ids`` return poisoned blocks that
         Freivalds verification must catch.  Uses the session RNG, so a
-        fixed-seed session is bit-reproducible."""
+        fixed-seed session is bit-reproducible.
+
+        ``backend="numpy"`` (default) is the float64 host stand-in;
+        ``backend="jax"`` runs the same tile decomposition through the
+        Pallas ``block_gemm`` kernel grid (``core.jax_executor``) with
+        MXU-aligned padding and a bf16-compute/f32-accumulate dtype policy
+        on TPU (f32/f32 elsewhere — ``interpret=True`` parity on CPU).
+        ``dtype_policy`` / ``kernel`` pass through to the jax backend."""
         if gemm is None:
             gemm = cm.GEMM(m=A.shape[0], n=A.shape[1], q=B.shape[1])
         plan, cached = self._solve_gemm(gemm)
+        report = self._execute_one(gemm, plan, cached, A, B,
+                                   fail_ids=fail_ids,
+                                   corrupt_ids=corrupt_ids, verify=verify,
+                                   backend=backend,
+                                   dtype_policy=dtype_policy, kernel=kernel)
+        self.history.append({
+            "event": "execute_step", "shape": (gemm.m, gemm.n, gemm.q),
+            "backend": report.backend,
+            "verified": report.verified, "n_tasks": report.n_tasks,
+            "n_recovered": report.n_recovered, "plan_cached": cached})
+        return report
+
+    def _execute_one(self, gemm: cm.GEMM, plan: cm.Plan, cached: bool,
+                     A: np.ndarray, B: np.ndarray, *,
+                     fail_ids: Sequence[int], corrupt_ids: Sequence[int],
+                     verify: bool, backend: str, dtype_policy,
+                     kernel: str) -> StepReport:
         t0 = time.perf_counter()
-        rep = executor.execute_plan(gemm, plan, A, B, self.fleet.devices,
-                                    fail_ids=fail_ids,
-                                    corrupt_ids=corrupt_ids,
-                                    rng=self.rng, verify=verify)
-        report = StepReport(
+        if backend == "numpy":
+            rep = executor.execute_plan(gemm, plan, A, B,
+                                        self.fleet.devices,
+                                        fail_ids=fail_ids,
+                                        corrupt_ids=corrupt_ids,
+                                        rng=self.rng, verify=verify)
+            kern, gflops = "", 0.0
+        elif backend == "jax":
+            from repro.core import jax_executor
+            rep = jax_executor.execute_plan_jax(
+                gemm, plan, A, B, self.fleet.devices, fail_ids=fail_ids,
+                corrupt_ids=corrupt_ids, rng=self.rng, verify=verify,
+                policy=dtype_policy, kernel=kernel)
+            kern, gflops = rep.kernel, rep.gflops
+        else:
+            raise ValueError(f"unknown executor backend {backend!r}; "
+                             "expected 'numpy' or 'jax'")
+        return StepReport(
             gemm=gemm, plan=plan, output=rep.output, verified=rep.verified,
             n_tasks=rep.n_tasks, n_recovered=rep.n_recovered,
             recovery=rep.recovery, exec_time=time.perf_counter() - t0,
-            plan_cached=cached)
+            plan_cached=cached, backend=backend, kernel=kern,
+            gflops=gflops)
+
+    def execute_level(self, pairs: Sequence[Tuple[np.ndarray, np.ndarray]],
+                      *, gemms: Optional[Sequence[cm.GEMM]] = None,
+                      fail_ids: Sequence[int] = (),
+                      corrupt_ids: Sequence[int] = (),
+                      verify: bool = True, backend: str = "numpy",
+                      dtype_policy=None, kernel: str = "auto",
+                      heterogeneity_aware: Optional[bool] = None
+                      ) -> LevelReport:
+        """Execute one GemmDag level: ``pairs`` is the level's ``(A, B)``
+        operand list (mutually independent GEMMs, Eq. 1).  Each GEMM's plan
+        is solved (or warm-loaded) from the session cache and run on the
+        chosen backend; the report carries the event engine's
+        ``price_plan`` level makespan next to the measured wall time, so
+        the predicted and executed schedule walk the same shapes.
+        ``heterogeneity_aware`` overrides the session flag (``None``), so
+        an ablation request executes the plans it priced."""
+        from repro.sim.engine import price_plan
+        if gemms is None:
+            gemms = [cm.GEMM(m=A.shape[0], n=A.shape[1], q=B.shape[1])
+                     for A, B in pairs]
+        if len(gemms) != len(pairs):
+            raise ValueError(f"{len(pairs)} operand pairs for "
+                             f"{len(gemms)} GEMMs")
+        t0 = time.perf_counter()
+        steps: List[StepReport] = []
+        predicted = 0.0
+        for g, (A, B) in zip(gemms, pairs):
+            plan, cached = self._solve_gemm(
+                g, heterogeneity_aware=heterogeneity_aware)
+            predicted = max(predicted, price_plan(g, plan,
+                                                  self.fleet.devices))
+            steps.append(self._execute_one(
+                g, plan, cached, A, B, fail_ids=fail_ids,
+                corrupt_ids=corrupt_ids, verify=verify, backend=backend,
+                dtype_policy=dtype_policy, kernel=kernel))
+        report = LevelReport(
+            steps=steps, backend=backend,
+            level_time=time.perf_counter() - t0,
+            predicted_makespan=predicted,
+            verified=all(s.verified for s in steps),
+            n_tasks=sum(s.n_tasks for s in steps),
+            n_recovered=sum(s.n_recovered for s in steps))
         self.history.append({
-            "event": "execute_step", "shape": (gemm.m, gemm.n, gemm.q),
-            "verified": report.verified, "n_tasks": report.n_tasks,
-            "n_recovered": report.n_recovered, "plan_cached": cached})
+            "event": "execute_level", "backend": backend,
+            "n_gemms": len(steps), "n_tasks": report.n_tasks,
+            "n_recovered": report.n_recovered,
+            "verified": report.verified})
+        return report
+
+    def execute_batch(self, batch: Optional[int] = None,
+                      seq: Optional[int] = None, *,
+                      request: Optional[PlanRequest] = None,
+                      inputs=None, max_levels: Optional[int] = None,
+                      verify: bool = True, backend: str = "numpy",
+                      dtype_policy=None, kernel: str = "auto",
+                      seed: Optional[int] = None) -> BatchExecuteReport:
+        """Walk the batch's GemmDag level by level and execute it for real
+        on the chosen backend — the schedule the session prices is the
+        schedule that runs.  ``inputs`` maps a GEMM to its ``(A, B)``
+        operands (default: seeded standard-normal float32 — a numerics
+        walk, not trained weights); count>1 GEMMs execute one
+        representative instance.  ``max_levels`` bounds the walk for
+        smoke-level budgets."""
+        if request is None:
+            if batch is None or seq is None:
+                raise ValueError("execute_batch() needs batch+seq or a "
+                                 "PlanRequest")
+            request = PlanRequest(
+                batch=batch, seq=seq,
+                attention_scores=self.attention_scores,
+                heterogeneity_aware=self.heterogeneity_aware)
+        dag = self._dag(request)
+        in_rng = np.random.default_rng(self.seed if seed is None else seed)
+        if inputs is None:
+            def inputs(g: cm.GEMM):
+                A = in_rng.standard_normal((g.m, g.n)).astype(np.float32)
+                B = in_rng.standard_normal((g.n, g.q)).astype(np.float32)
+                return A, B
+        t0 = time.perf_counter()
+        levels: List[LevelReport] = []
+        for li, level in enumerate(dag.levels()):
+            if max_levels is not None and li >= max_levels:
+                break
+            pairs = [inputs(g) for g in level]
+            levels.append(self.execute_level(
+                pairs, gemms=level, verify=verify, backend=backend,
+                dtype_policy=dtype_policy, kernel=kernel,
+                heterogeneity_aware=request.heterogeneity_aware))
+        report = BatchExecuteReport(
+            request=request, backend=backend, levels=levels,
+            wall_time=time.perf_counter() - t0,
+            predicted_gemm_time=float(sum(l.predicted_makespan
+                                          for l in levels)),
+            verified=all(l.verified for l in levels),
+            n_tasks=sum(l.n_tasks for l in levels),
+            n_recovered=sum(l.n_recovered for l in levels))
+        self.history.append({
+            "event": "execute_batch", "backend": backend,
+            "batch": request.batch, "seq": request.seq,
+            "n_levels": report.n_levels, "n_tasks": report.n_tasks,
+            "verified": report.verified})
         return report
 
     # -------------------------------------------------------------- recover --
@@ -318,8 +496,15 @@ class CleaveRuntime:
         """Profile the streamed row-column pipeline (Eq. 9') for ``k``
         (alpha x beta) work quanta on a representative device, with optional
         Pareto(α) stage jitter, and apply the session mitigation policy to
-        the jittered latency."""
-        from repro.core import streaming
+        the jittered latency.
+
+        ``pareto_alpha=0`` (the default) means a deterministic profile; any
+        other value must exceed 1 for a finite-mean Pareto, matching the
+        ``tail``/``streaming`` entry points (a value in (0, 1] used to be
+        silently treated as "no jitter")."""
+        from repro.core import streaming, tail
+        if pareto_alpha != 0.0:
+            tail.require_alpha_gt1(pareto_alpha, "stream_profile")
         if device is None:
             devs = sorted(self.fleet.devices, key=lambda d: d.flops)
             device = devs[len(devs) // 2]
@@ -436,14 +621,23 @@ class CleaveRuntime:
         return self._plan_caches.setdefault(
             (self.fleet.signature(), heterogeneity_aware), {})
 
-    def _solve_gemm(self, gemm: cm.GEMM) -> Tuple[cm.Plan, bool]:
-        cache = self._cache(True)
+    def _solve_gemm(self, gemm: cm.GEMM,
+                    heterogeneity_aware: Optional[bool] = None
+                    ) -> Tuple[cm.Plan, bool]:
+        het = self.heterogeneity_aware if heterogeneity_aware is None \
+            else heterogeneity_aware
+        cache = self._cache(het)
         key = plan_shape_key(gemm) + (gemm.count,)
         if key in cache:
             return cache[key], True
-        # same solver path as schedule(), so cache entries are identical
-        # regardless of whether plan() or plan_gemm() created them
-        plan = solve_level_gemm(gemm, self.fleet.devices)
+        # same solver path as schedule() — including the session's
+        # heterogeneity setting — so cache entries are identical regardless
+        # of whether plan(), plan_gemm(), or execute_step() created them
+        if het:
+            plan = solve_level_gemm(gemm, self.fleet.devices)
+        else:
+            plan = solve_level_gemm(gemm, _homogenize(self.fleet.devices))
+            reprice_plan(plan, self.fleet.devices)
         cache[key] = plan
         return plan, False
 
@@ -468,7 +662,9 @@ def _patch_plan(plan: cm.Plan, failed: set,
     event = churn.FailureEvent(gemm=plan.gemm, failed_ids=hit, plan=plan)
     rec = churn.recover(event, survivors)
     assignments = [a for a in plan.assignments if a.device_id not in failed]
-    for rect, patch in zip(orphans, rec.patch_plans):
+    # iterate the (rect, patch) pairs — recover() may skip degenerate
+    # orphans, so zipping against `orphans` could misalign patch offsets
+    for rect, patch in rec.patches:
         for pa in patch.assignments:
             assignments.append(cm.Assignment(
                 device_id=pa.device_id,

@@ -26,10 +26,21 @@ class FailureEvent:
 
 @dataclass
 class RecoveryResult:
-    patch_plans: list           # one Plan per orphaned rectangle
+    patches: list               # (orphan rect, patch Plan) pairs.  Empty or
+    #                             fully-completed orphan rectangles are
+    #                             skipped, so consumers must NOT zip the
+    #                             plans against the plan's orphan list —
+    #                             iterate the pairs, which carry the rect a
+    #                             patch's offsets are relative to.
     recovery_time: float        # makespan of the patch schedule
     recomputed_fraction: float  # share of the GEMM output recomputed
     solve_time: float           # wall-clock of the incremental re-solve
+
+    @property
+    def patch_plans(self) -> list:
+        """The patch plans alone (legacy view; alignment-safe iteration is
+        ``for rect, patch in result.patches``)."""
+        return [p for _, p in self.patches]
 
 
 def device_caches(plan: cm.Plan) -> Dict[int, tuple]:
@@ -70,7 +81,7 @@ def recover(event: FailureEvent, devices: Sequence[cm.Device],
     orphan_rects = [a for a in event.plan.assignments
                     if a.device_id in failed]
 
-    patch_plans: List[cm.Plan] = []
+    patches: List[tuple] = []
     total_area = float(event.gemm.m * event.gemm.q)
     orphan_area = 0.0
     recovery_time = 0.0
@@ -84,12 +95,12 @@ def recover(event: FailureEvent, devices: Sequence[cm.Device],
                       level=event.gemm.level, layer=event.gemm.layer)
         caches = _cache_overlap(event.plan, rect)
         plan = cm.solve_gemm(sub, survivors, caches=caches)
-        patch_plans.append(plan)
+        patches.append((rect, plan))
         orphan_area += sub.m * sub.q
         recovery_time = max(recovery_time, plan.makespan)
     solve_time = time.perf_counter() - t0
     return RecoveryResult(
-        patch_plans=patch_plans, recovery_time=recovery_time,
+        patches=patches, recovery_time=recovery_time,
         recomputed_fraction=orphan_area / total_area,
         solve_time=solve_time)
 

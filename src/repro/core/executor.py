@@ -59,7 +59,7 @@ def execute_plan(gemm: cm.GEMM, plan: cm.Plan, A: np.ndarray, B: np.ndarray,
         Ab = A[r0:r1].astype(np.float64)
         Bb = B[:, c0:c1].astype(np.float64)
         block = Ab @ Bb
-        if a.device_id in corrupt:
+        if a.device_id in corrupt and block.size:
             block = block.copy()
             block[0, 0] += 1.0 + abs(block[0, 0])
         ok = freivalds(Ab, Bb, block, rng) if verify else True
@@ -81,8 +81,9 @@ def execute_plan(gemm: cm.GEMM, plan: cm.Plan, A: np.ndarray, B: np.ndarray,
         event = churn.FailureEvent(gemm=gemm, failed_ids=sorted(fail),
                                    plan=plan)
         recovery = churn.recover(event, devices)
-        orphans = [a for a in plan.assignments if a.device_id in fail]
-        for rect, patch in zip(orphans, recovery.patch_plans):
+        # recover() skips empty/fully-completed orphans; the (rect, patch)
+        # pairs keep each patch anchored to its own rectangle's offsets
+        for rect, patch in recovery.patches:
             for pa in patch.assignments:
                 run(pa, base_r=rect.r0, base_c=rect.c0)
                 n_rec += 1

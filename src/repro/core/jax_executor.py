@@ -1,0 +1,198 @@
+"""JAX/Pallas fleet executor: runs a CLEAVE plan's assignment rectangles
+through the ``block_gemm`` kernel grid (§3.2 exact-semantics claim, executed
+on the accelerator substrate instead of the numpy stand-in).
+
+Each assignment rectangle becomes one sub-GEMM tile: its A row-band and B
+column-slab are gathered, zero-padded to MXU-aligned blocks, bucketed by
+padded shape, and every bucket runs as ONE batched kernel launch
+(``kernels.ops.plan_gemm``).  Failure, corruption, Freivalds verification,
+and churn recovery follow the numpy executor exactly — same task order,
+same ``churn.recover`` patch pairs, same PS re-dispatch on a failed check —
+so the two backends are drop-in interchangeable behind
+``CleaveRuntime.execute_step(backend=...)``.
+
+Dtype policy: inputs are cast to the policy compute dtype (bfloat16 on TPU —
+the MXU-native path — float32 elsewhere) and accumulated in float32 inside
+the kernel; Freivalds tolerances scale with the compute dtype.  On CPU the
+Pallas kernel executes via ``interpret=True`` (correctness parity); pass
+``kernel="xla"`` for the compiled host path with identical padding/bucketing
+semantics.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core import churn, cost_model as cm
+from repro.core.executor import ExecutionReport
+from repro.core.seeding import as_rng
+from repro.core.verify import freivalds
+
+
+@dataclass(frozen=True)
+class DtypePolicy:
+    """How the device fleet computes one sub-GEMM tile.
+
+    ``compute_dtype`` is the kernel input dtype (MXU operand precision);
+    accumulation is always float32 (``preferred_element_type`` in the
+    kernel).  ``eps`` is the compute dtype's unit roundoff and
+    ``freivalds_c`` a safety factor: the per-block Freivalds tolerance is
+    ``c * eps * sqrt(n / area)`` relative to the |r|·|C|·|s| scale, which
+    keeps a constant margin over the probabilistic rounding residual
+    (~sqrt(area·n)·eps·|C|) for every rectangle shape — tight slivers and
+    wide blocks alike — while O(1) poisoning stays detectable under the
+    f32 policy (bf16 rounding noise genuinely swamps a minimum-magnitude
+    single-entry corruption on large blocks; that is physics, not a bug).
+    """
+    name: str
+    compute_dtype: str
+    eps: float
+    freivalds_c: float
+
+    def freivalds_rtol(self, n: int, area: int) -> float:
+        return self.freivalds_c * self.eps * float(
+            np.sqrt(max(n, 1) / max(area, 1)))
+
+
+POLICIES = {
+    # f32 compute / f32 accumulate: the CPU-parity and equivalence-suite
+    # policy (matches the numpy/f64 executor to <=1e-5 relative)
+    "f32": DtypePolicy(name="f32", compute_dtype="float32",
+                       eps=1.2e-7, freivalds_c=16.0),
+    # bf16 compute / f32 accumulate: the TPU MXU-native policy
+    "bf16": DtypePolicy(name="bf16", compute_dtype="bfloat16",
+                        eps=7.8e-3, freivalds_c=32.0),
+}
+
+
+def default_policy() -> DtypePolicy:
+    import jax
+    return POLICIES["bf16" if jax.default_backend() == "tpu" else "f32"]
+
+
+def get_policy(policy: Union[str, DtypePolicy, None]) -> DtypePolicy:
+    if policy is None:
+        return default_policy()
+    if isinstance(policy, DtypePolicy):
+        return policy
+    if policy not in POLICIES:
+        raise ValueError(f"unknown dtype policy {policy!r}; "
+                         f"known: {sorted(POLICIES)} or a DtypePolicy")
+    return POLICIES[policy]
+
+
+@dataclass
+class JaxExecutionReport(ExecutionReport):
+    """ExecutionReport plus accelerator-side throughput accounting."""
+    backend: str = "jax"
+    kernel: str = "xla"            # 'pallas' | 'xla' (resolved)
+    policy: str = "f32"
+    exec_time: float = 0.0         # kernel + gather/scatter wall-clock
+    gflops: float = 0.0            # achieved GFLOP/s over exec_time
+    tasks_per_s: float = 0.0
+
+
+def _redispatch(Ab: np.ndarray, Bb: np.ndarray,
+                pol: DtypePolicy) -> np.ndarray:
+    """Clean recompute of one tile under the policy dtype (the PS
+    re-dispatch after a failed Freivalds check)."""
+    import jax.numpy as jnp
+    return np.asarray(jnp.einsum(
+        "mk,kq->mq", jnp.asarray(Ab, pol.compute_dtype),
+        jnp.asarray(Bb, pol.compute_dtype),
+        preferred_element_type=jnp.float32), np.float32)
+
+
+def execute_plan_jax(gemm: cm.GEMM, plan: cm.Plan, A: np.ndarray,
+                     B: np.ndarray, devices: Sequence[cm.Device],
+                     fail_ids: Sequence[int] = (),
+                     corrupt_ids: Sequence[int] = (),
+                     rng: Union[np.random.Generator, int, None] = None,
+                     verify: bool = True,
+                     policy: Union[str, DtypePolicy, None] = None,
+                     kernel: str = "auto",
+                     block: int = 128) -> JaxExecutionReport:
+    """Execute every assignment rectangle on the JAX backend.
+
+    Semantics mirror :func:`repro.core.executor.execute_plan`: devices in
+    ``fail_ids`` vanish before uploading (their rectangles are re-solved via
+    ``churn.recover`` and executed by survivors), devices in ``corrupt_ids``
+    return poisoned blocks that Freivalds verification must catch (the PS
+    then re-dispatches the tile).  ``kernel`` selects the compiled substrate
+    (see :func:`repro.kernels.ops.resolve_plan_kernel`); ``policy`` the
+    compute dtype.  Prefer driving this through
+    ``CleaveRuntime.execute_step(backend="jax")``.
+    """
+    from repro.kernels import ops
+
+    pol = get_policy(policy)
+    kernel = ops.resolve_plan_kernel(kernel)
+    rng = as_rng(rng)
+    m, q = gemm.m, gemm.q
+    assert A.shape == (m, gemm.n) and B.shape == (gemm.n, q)
+    fail = set(fail_ids)
+    corrupt = set(corrupt_ids)
+
+    # ---- task list: surviving rectangles, then recovery patches ----------
+    # (device_id, r0, r1, c0, c1, is_recovery) in the numpy executor's order
+    tasks: List[Tuple[int, int, int, int, int, bool]] = []
+    for a in plan.assignments:
+        if a.device_id in fail:
+            continue
+        tasks.append((a.device_id, a.r0, a.r1, a.c0, a.c1, False))
+
+    recovery: Optional[churn.RecoveryResult] = None
+    if fail:
+        event = churn.FailureEvent(gemm=gemm, failed_ids=sorted(fail),
+                                   plan=plan)
+        recovery = churn.recover(event, devices)
+        for rect, patch in recovery.patches:
+            for pa in patch.assignments:
+                tasks.append((pa.device_id, rect.r0 + pa.r0,
+                              rect.r0 + pa.r1, rect.c0 + pa.c0,
+                              rect.c0 + pa.c1, True))
+
+    # ---- one batched pass per padded-shape bucket ------------------------
+    t0 = time.perf_counter()
+    rects = [(r0, r1, c0, c1) for _, r0, r1, c0, c1, _ in tasks]
+    blocks = ops.plan_gemm(A, B, rects, block=block, kernel=kernel,
+                           compute_dtype=pol.compute_dtype)
+
+    C = np.zeros((m, q), np.float32)
+    filled = np.zeros((m, q), bool)
+    verified = True
+    n_tasks = 0
+    n_rec = 0
+    flops = 0.0
+    for (dev_id, r0, r1, c0, c1, is_rec), blk in zip(tasks, blocks):
+        if dev_id in corrupt and blk.size:
+            blk = blk.copy()
+            blk[0, 0] += 1.0 + abs(blk[0, 0])
+        ok = True
+        if verify:
+            rtol = pol.freivalds_rtol(gemm.n, (r1 - r0) * (c1 - c0))
+            ok = freivalds(A[r0:r1], B[:, c0:c1], blk, rng, rtol=rtol)
+        if not ok:
+            verified = False
+            # PS re-dispatches the tile to a clean device: same dtype
+            # policy (compute-dtype operands, f32 accumulation), computed
+            # directly on the already-sliced operands
+            blk = _redispatch(A[r0:r1], B[:, c0:c1], pol)
+        assert not filled[r0:r1, c0:c1].any(), "overlapping assignment"
+        C[r0:r1, c0:c1] = blk
+        filled[r0:r1, c0:c1] = True
+        n_tasks += 1
+        flops += 2.0 * (r1 - r0) * gemm.n * (c1 - c0)
+        if is_rec:
+            n_rec += 1
+    exec_time = time.perf_counter() - t0
+
+    assert filled.all(), "coverage violated"
+    return JaxExecutionReport(
+        output=C, verified=verified, n_tasks=n_tasks, n_recovered=n_rec,
+        recovery=recovery, backend="jax", kernel=kernel, policy=pol.name,
+        exec_time=exec_time, gflops=flops / max(exec_time, 1e-12) / 1e9,
+        tasks_per_s=n_tasks / max(exec_time, 1e-12))

@@ -97,24 +97,8 @@ def schedule(dag: GemmDag, devices: Sequence[cm.Device],
 
     dag_keys = {plan_shape_key(g) + (g.count,) for g in dag.gemms}
     if not heterogeneity_aware:
-        by_id = {d.device_id: d for d in real_devices}
         for k in dag_keys:
-            p = plans[k]
-            if p.instances is not None:
-                t = 0.0
-                for did, wi in p.instances.items():
-                    d = by_id[did]
-                    t = max(t, max(d.dl_lat, d.ul_lat)
-                            + wi * cm.instance_time(p.gemm, d))
-                p.makespan = t
-            else:
-                p.makespan = cm.plan_makespan(p.gemm, real_devices, p) \
-                    * p.n_split
-                if p.gemm.count > 1:
-                    # keep the count>1 wave multiplier the het-aware solve
-                    # applies (re-pricing used to silently drop it)
-                    p.makespan *= _wave_factor(p.gemm, p,
-                                               len(real_devices))
+            reprice_plan(plans[k], real_devices)
         devices = real_devices
 
     level_times = []
@@ -142,6 +126,26 @@ def schedule(dag: GemmDag, devices: Sequence[cm.Device],
         batch_time=batch_time, gemm_time=gemm_time, opt_tail=opt_tail,
         level_times=level_times, per_device_comm=comm, per_device_dl=dl,
         per_device_ul=ul, per_device_mem=mem, excluded=excluded)
+
+
+def reprice_plan(p: cm.Plan, real_devices: Sequence[cm.Device]) -> None:
+    """Re-price a plan solved on an idealized (homogenized) fleet against
+    the real heterogeneous one: the slowest real participant bounds each
+    level (Table 9 ablation).  Idempotent — the makespan is recomputed from
+    scratch, with the n_split rounds and count>1 wave multiplier the
+    het-aware solve applies."""
+    if p.instances is not None:
+        by_id = {d.device_id: d for d in real_devices}
+        t = 0.0
+        for did, wi in p.instances.items():
+            d = by_id[did]
+            t = max(t, max(d.dl_lat, d.ul_lat)
+                    + wi * cm.instance_time(p.gemm, d))
+        p.makespan = t
+    else:
+        p.makespan = cm.plan_makespan(p.gemm, real_devices, p) * p.n_split
+        if p.gemm.count > 1:
+            p.makespan *= _wave_factor(p.gemm, p, len(real_devices))
 
 
 def _wave_factor(g: cm.GEMM, plan: cm.Plan, n_devices: int) -> float:

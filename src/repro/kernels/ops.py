@@ -43,6 +43,109 @@ def block_gemm(a, b, *, bm=128, bn=128, bk=128):
     return out[:m, :n]
 
 
+# ------------------------------------------------------- plan execution ----
+
+def resolve_plan_kernel(kernel: str = "auto") -> str:
+    """``"pallas"`` on TPU (the compiled block_gemm grid), ``"xla"`` on
+    hosts without one (batched dot through XLA — the meaningful compiled
+    CPU path; ``kernel="pallas"`` off-TPU still works via interpret=True
+    and is what the CPU parity tests pin)."""
+    if kernel == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if kernel not in ("pallas", "xla"):
+        raise ValueError(f"unknown plan_gemm kernel {kernel!r}; "
+                         "expected 'auto', 'pallas', or 'xla'")
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("pm", "pq", "bm", "bn", "bk", "kernel",
+                                    "compute_dtype"))
+def _bucket_gemm(a_pad, b_pad, r0s, c0s, *, pm, pq, bm, bn, bk, kernel,
+                 compute_dtype):
+    """One padded-shape bucket: gather every rectangle's A row-band /
+    B column-slab on-device (vmapped dynamic_slice — no host staging
+    copies), cast to the policy compute dtype, and run the whole bucket as
+    one batched kernel launch with f32 accumulation."""
+    nk = a_pad.shape[1]
+
+    def ga(r0):
+        return jax.lax.dynamic_slice(a_pad, (r0, 0), (pm, nk))
+
+    def gb(c0):
+        return jax.lax.dynamic_slice(b_pad, (0, c0), (nk, pq))
+
+    As = jax.vmap(ga)(r0s).astype(compute_dtype)
+    Bs = jax.vmap(gb)(c0s).astype(compute_dtype)
+    if kernel == "xla":
+        return jnp.einsum("gmk,gkn->gmn", As, Bs,
+                          preferred_element_type=jnp.float32)
+    return _bg.block_gemm_batched(As, Bs, bm=bm, bn=bn, bk=bk,
+                                  out_dtype=jnp.float32,
+                                  interpret=_interpret())
+
+
+def plan_gemm(a, b, rects, *, block=128, kernel="auto",
+              compute_dtype=None):
+    """Execute output rectangles of C = A @ B as batched sub-GEMMs.
+
+    ``rects`` is a sequence of ``(r0, r1, c0, c1)`` output rectangles (a
+    CLEAVE plan's assignment grid).  Rectangles are bucketed by their
+    MXU-aligned padded shape (multiples of ``block``); each bucket gathers
+    its A row-bands and B column-slabs on-device and runs as ONE batched
+    kernel launch (``kernels.block_gemm.block_gemm_batched`` for
+    ``kernel="pallas"``, a batched XLA dot for ``"xla"``; see
+    :func:`resolve_plan_kernel`).  A and B are zero-padded once past their
+    edges, so an over-wide gather reads either real neighbour rows/columns
+    or zeros — both cropped away — and the kept region is exactly the
+    rectangle's product.
+
+    ``compute_dtype`` defaults to bfloat16 on TPU (MXU-native) and float32
+    elsewhere; accumulation is float32 in both kernels.  Returns float32
+    numpy blocks in ``rects`` order."""
+    kernel = resolve_plan_kernel(kernel)
+    if compute_dtype is None:
+        compute_dtype = ("bfloat16" if jax.default_backend() == "tpu"
+                         else "float32")
+    a = np.asarray(a)
+    b = np.asarray(b)
+    m, n = a.shape
+    q = b.shape[1]
+    nk = max(-(-n // block) * block, block)
+    blocks: list = [None] * len(rects)
+    buckets: dict = {}
+    for i, (r0, r1, c0, c1) in enumerate(rects):
+        al, be = r1 - r0, c1 - c0
+        if al <= 0 or be <= 0:
+            blocks[i] = np.zeros((max(al, 0), max(be, 0)), np.float32)
+            continue
+        pm = -(-al // block) * block
+        pq = -(-be // block) * block
+        buckets.setdefault((pm, pq), []).append(i)
+    if not buckets:
+        return blocks
+    # pad once: rows/cols past the edge make every in-bucket gather legal
+    pmax = max(pm for pm, _ in buckets)
+    qmax = max(pq for _, pq in buckets)
+    a_pad = np.zeros((m + pmax, nk), np.float32)
+    a_pad[:m, :n] = a
+    b_pad = np.zeros((nk, q + qmax), np.float32)
+    b_pad[:n, :q] = b
+    a_pad = jnp.asarray(a_pad)
+    b_pad = jnp.asarray(b_pad)
+    for (pm, pq), idxs in buckets.items():
+        r0s = jnp.asarray([rects[i][0] for i in idxs], jnp.int32)
+        c0s = jnp.asarray([rects[i][2] for i in idxs], jnp.int32)
+        out = np.asarray(_bucket_gemm(
+            a_pad, b_pad, r0s, c0s, pm=pm, pq=pq,
+            bm=min(block, pm), bn=min(block, pq), bk=min(block, nk),
+            kernel=kernel, compute_dtype=compute_dtype))
+        for g, i in enumerate(idxs):
+            r0, r1, c0, c1 = rects[i]
+            blocks[i] = out[g, :r1 - r0, :c1 - c0]
+    return blocks
+
+
 @functools.partial(jax.jit,
                    static_argnames=("causal", "window", "bq", "bk"))
 def mha_flash(q, k, v, *, causal=True, window=0, bq=128, bk=128):

@@ -719,11 +719,9 @@ def simulate_schedule(sp, devices: Optional[Sequence[cm.Device]] = None, *,
                 state["recomputed"] = max(state["recomputed"],
                                           patched[key].recomputed_fraction)
             rec = patched[key]
-            # same rect order + degenerate-rect skip as churn.recover
-            rects = [x for x in plan.assignments
-                     if x.device_id == dead_id and x.r1 > x.r0
-                     and x.c1 > x.c0]
-            for rect, patch in zip(rects, rec.patch_plans):
+            # the (rect, patch) pairs are alignment-safe even when recover()
+            # skipped degenerate orphans
+            for rect, patch in rec.patches:
                 if (rect.r0, rect.c0) != (a.r0, a.c0):
                     continue
                 for did2, items in plan_chains(patch.gemm, patch, sur_by_id,

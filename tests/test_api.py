@@ -88,6 +88,56 @@ def test_churn_patches_heterogeneity_ablation_cache():
     assert r2.cache_misses <= report.n_plans_dropped
 
 
+def test_solve_gemm_honors_heterogeneity_flag():
+    """Regression: plan_gemm/execute_step used to solve het-aware and fill
+    the het=True cache even for a heterogeneity_aware=False session.  They
+    must share the session-matching cache and solver with plan()."""
+    fleet = Fleet.sample(16, seed=0)
+    req = PlanRequest(batch=8, seq=64, heterogeneity_aware=False)
+    a = CleaveRuntime(arch=ARCH, fleet=fleet, heterogeneity_aware=False)
+    ra = a.plan(request=req)
+    g = ra.schedule.dag.gemms[0]
+    key = (g.m, g.n, g.q, g.b, g.count)
+    # plan_gemm hits the het=False cache that plan() filled...
+    plan = a.plan_gemm(g)
+    assert plan is ra.schedule.plans_by_shape[key]
+    # ...and a cold plan_gemm solves the same homogeneous-share plan with
+    # the real-fleet re-pricing that schedule() applies
+    b = CleaveRuntime(arch=ARCH, fleet=fleet, heterogeneity_aware=False)
+    cold = b.plan_gemm(g)
+    assert cold.makespan == pytest.approx(plan.makespan, rel=1e-12)
+    areas = {x.alpha * x.beta for x in cold.assignments}
+    het = CleaveRuntime(arch=ARCH, fleet=fleet).plan_gemm(g)
+    assert cold.makespan != pytest.approx(het.makespan, rel=1e-6)
+    # equal-share plans have near-uniform rectangle areas, unlike het-aware
+    assert (max(areas) - min(areas)) / max(areas) < 0.2
+
+
+def test_execute_batch_honors_request_heterogeneity():
+    """A het=False request on a het=True session must execute the plans
+    plan() priced for that request (het=False cache), not re-solve
+    het-aware ones."""
+    cfg = get_config(ARCH).reduced(n_layers=1, vocab_size=256)
+    rt = CleaveRuntime(arch=cfg, fleet=Fleet.sample(8, seed=0))
+    req = PlanRequest(batch=2, seq=16, heterogeneity_aware=False)
+    rt.plan(request=req)
+    rep = rt.execute_batch(request=req, max_levels=2)
+    assert rep.verified
+    assert all(s.plan_cached for lev in rep.levels for s in lev.steps)
+
+
+def test_stream_profile_rejects_infinite_mean_pareto(rt):
+    """0 < pareto_alpha <= 1 used to be silently treated as 'no jitter';
+    it must raise like the tail/streaming entry points do."""
+    g = cm.GEMM(m=1024, n=512, q=512)
+    for bad in (0.5, 1.0, -2.0, float("nan")):
+        with pytest.raises(ValueError, match="pareto_alpha"):
+            rt.stream_profile(g, k=4, pareto_alpha=bad)
+    # 0.0 stays the documented deterministic sentinel
+    prof = rt.stream_profile(g, k=4, pareto_alpha=0.0)
+    assert prof.jittered_time == prof.pipelined_time
+
+
 def test_plan_gemm_matches_schedule_for_batched_shapes():
     """plan_gemm and plan() share one solver path, so a count>1 shape
     cached by plan_gemm first yields the same batch_time as a cold plan."""

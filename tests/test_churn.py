@@ -74,6 +74,70 @@ def test_partial_completion_shrinks_recovery():
     assert part.recomputed_fraction < full.recomputed_fraction
 
 
+def test_recovery_patches_pair_rect_and_plan():
+    """Regression: `recover` skips empty/fully-completed orphans, so the
+    result must pair each patch with its rectangle — zipping the patch list
+    against the plan's orphan rectangles misaligned offsets whenever a
+    degenerate orphan preceded a real one."""
+    devs = sample_fleet(8, np.random.default_rng(0))
+    g = cm.GEMM(m=128, n=256, q=128)
+    # device 0 owns a degenerate rectangle *before* its real one
+    plan = cm.Plan(gemm=g, assignments=[
+        cm.Assignment(device_id=0, r0=96, r1=96, c0=0, c1=0),
+        cm.Assignment(device_id=0, r0=0, r1=64, c0=0, c1=128),
+        cm.Assignment(device_id=1, r0=64, r1=128, c0=0, c1=128),
+    ], makespan=1.0, lower_bound=0.1)
+    event = churn.FailureEvent(gemm=g, failed_ids=[0], plan=plan)
+    rec = churn.recover(event, devs)
+    assert len(rec.patches) == 1
+    rect, patch = rec.patches[0]
+    assert (rect.r0, rect.r1, rect.c0, rect.c1) == (0, 64, 0, 128)
+    assert patch.gemm.m == 64 and patch.gemm.q == 128
+    # legacy view stays available and equal
+    assert rec.patch_plans == [patch]
+
+
+def test_recovery_pairs_with_partial_completion():
+    """completed_fraction > 0 shrinks every orphan's unfinished columns; the
+    pairs keep each (possibly shrunk) patch anchored to its own rect."""
+    g, devs, plan = _plan(n_dev=16)
+    victims = sorted({a.device_id for a in plan.assignments})[:2]
+    event = churn.FailureEvent(gemm=g, failed_ids=victims, plan=plan)
+    rec = churn.recover(event, devs, completed_fraction=0.5)
+    orphans = [a for a in plan.assignments if a.device_id in set(victims)]
+    assert rec.patches, "expected at least one unfinished orphan"
+    for rect, patch in rec.patches:
+        assert rect in orphans
+        assert patch.gemm.m == rect.r1 - rect.r0
+        expect_q = (rect.c1 - rect.c0
+                    - int(0.5 * (rect.c1 - rect.c0)))
+        assert patch.gemm.q == expect_q
+
+
+def test_executor_recovery_with_degenerate_orphan(rng):
+    """End-to-end regression: a failed device holding a degenerate rectangle
+    ahead of a real one still recovers the exact product (pre-fix, the
+    misaligned zip wrote the patch at the degenerate rect's offsets)."""
+    devs = sample_fleet(8, np.random.default_rng(0))
+    g = cm.GEMM(m=128, n=256, q=128)
+    base = cm.solve_gemm(g, devs)
+    victim = base.assignments[0].device_id
+    rect = next(a for a in base.assignments if a.device_id == victim)
+    assignments = [cm.Assignment(device_id=victim, r0=rect.r1, r1=rect.r1,
+                                 c0=rect.c0, c1=rect.c0)] \
+        + list(base.assignments)
+    plan = cm.Plan(gemm=g, assignments=assignments,
+                   makespan=base.makespan, lower_bound=base.lower_bound)
+    A = rng.standard_normal((g.m, g.n)).astype(np.float32)
+    B = rng.standard_normal((g.n, g.q)).astype(np.float32)
+    rep = executor.execute_plan(g, plan, A, B, devs, fail_ids=[victim],
+                                rng=rng)
+    np.testing.assert_allclose(
+        rep.output, A.astype(np.float64) @ B.astype(np.float64),
+        rtol=1e-9, atol=1e-8)
+    assert rep.n_recovered > 0
+
+
 def test_admit_new_device():
     devs = sample_fleet(8, np.random.default_rng(0))
     new = cm.Device(flops=2e13, dl_bw=8e7, ul_bw=9e6)

@@ -1,0 +1,305 @@
+"""Backend-equivalence suite: the JAX/Pallas fleet executor must compute
+the same numbers as the numpy executor and a monolithic ``jnp.einsum``
+oracle — including under injected failures and caught corruption — to
+<=1e-5 relative under the f32 dtype policy (§3.2 exact-semantics claim on
+the accelerator substrate).  All jax paths run on CPU via interpret=True
+(``kernel="pallas"``) or compiled XLA (``kernel="xla"``)."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import CleaveRuntime, Fleet
+from repro.core import cost_model as cm, executor, jax_executor
+from repro.kernels import block_gemm as bg
+from repro.kernels import ops
+from repro.sim.devices import sample_fleet
+
+RTOL = 1e-5
+
+
+def _ab(rng, g):
+    A = rng.standard_normal((g.m, g.n)).astype(np.float32)
+    B = rng.standard_normal((g.n, g.q)).astype(np.float32)
+    return A, B
+
+
+def _oracle(A, B):
+    """The monolithic ``jnp.einsum`` oracle (f32 — JAX's default compute
+    precision); both backends must match it to <=1e-5 relative.  For the
+    numpy executor's own 1e-9 check use :func:`_exact`."""
+    return np.asarray(jnp.einsum("mk,kq->mq", jnp.asarray(A, jnp.float32),
+                                 jnp.asarray(B, jnp.float32)),
+                      np.float64)
+
+
+def _exact(A, B):
+    return A.astype(np.float64) @ B.astype(np.float64)
+
+
+def _assert_close(got, want, rtol=RTOL):
+    scale = np.max(np.abs(want))
+    np.testing.assert_allclose(np.asarray(got, np.float64), want,
+                               rtol=rtol, atol=rtol * scale)
+
+
+# ------------------------------------------------------ kernel primitives --
+
+@pytest.mark.parametrize("G,m,k,n,bm", [(1, 128, 128, 128, 64),
+                                        (3, 128, 256, 128, 64),
+                                        (2, 64, 128, 192, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_gemm_batched_matches_einsum(G, m, k, n, bm, dtype, rng):
+    a = jnp.asarray(rng.standard_normal((G, m, k)), dtype)
+    b = jnp.asarray(rng.standard_normal((G, k, n)), dtype)
+    out = bg.block_gemm_batched(a, b, bm=bm, bn=bm, bk=bm,
+                                out_dtype=jnp.float32, interpret=True)
+    want = jnp.einsum("gmk,gkn->gmn", a.astype(jnp.float32),
+                      b.astype(jnp.float32))
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("kernel", ["xla", "pallas"])
+def test_plan_gemm_rect_execution(kernel, rng):
+    """Uneven, unaligned rectangles (sliver included) crop back exactly."""
+    m, n, q = 200, 300, 170
+    A = rng.standard_normal((m, n)).astype(np.float32)
+    B = rng.standard_normal((n, q)).astype(np.float32)
+    C = _oracle(A, B)
+    rects = [(0, 128, 0, 37), (0, 128, 37, 170), (128, 200, 0, 169),
+             (128, 200, 169, 170),          # width-1 sliver
+             (50, 50, 0, 170)]              # degenerate: empty block
+    blocks = ops.plan_gemm(A, B, rects, kernel=kernel,
+                           compute_dtype="float32")
+    for (r0, r1, c0, c1), blk in zip(rects, blocks):
+        assert blk.shape == (r1 - r0, c1 - c0)
+        if blk.size:
+            _assert_close(blk, C[r0:r1, c0:c1])
+
+
+def test_plan_gemm_rejects_unknown_kernel():
+    with pytest.raises(ValueError, match="kernel"):
+        ops.resolve_plan_kernel("triton")
+
+
+def test_dtype_policy_registry():
+    assert jax_executor.get_policy("f32").compute_dtype == "float32"
+    assert jax_executor.get_policy("bf16").compute_dtype == "bfloat16"
+    pol = jax_executor.POLICIES["f32"]
+    assert jax_executor.get_policy(pol) is pol
+    assert jax_executor.get_policy(None).name in ("f32", "bf16")
+    with pytest.raises(ValueError, match="policy"):
+        jax_executor.get_policy("f16")
+    # sliver blocks get a looser tolerance than wide blocks, never absurd
+    assert pol.freivalds_rtol(1024, 32) > pol.freivalds_rtol(1024, 65536)
+
+
+# ------------------------------------------------- backend equivalence -----
+
+SHAPES = [
+    (128, 128, 128, 8),     # aligned
+    (200, 300, 170, 8),     # nothing is a multiple of anything
+    (96, 512, 64, 12),      # tall contraction
+    (257, 129, 131, 16),    # odd primes, more devices
+]
+
+
+@pytest.mark.parametrize("m,n,q,n_dev", SHAPES)
+def test_backend_equivalence_sweep(m, n, q, n_dev, rng):
+    g = cm.GEMM(m=m, n=n, q=q)
+    devs = sample_fleet(n_dev, np.random.default_rng(0))
+    plan = cm.solve_gemm(g, devs)
+    A, B = _ab(rng, g)
+    want = _oracle(A, B)
+    rep_np = executor.execute_plan(g, plan, A, B, devs, rng=0)
+    rep_jx = jax_executor.execute_plan_jax(g, plan, A, B, devs, rng=0,
+                                           kernel="xla")
+    assert rep_np.verified and rep_jx.verified
+    assert rep_np.n_tasks == rep_jx.n_tasks
+    _assert_close(rep_np.output, _exact(A, B), rtol=1e-9)
+    _assert_close(rep_np.output, want)
+    _assert_close(rep_jx.output, want)
+    _assert_close(rep_jx.output, rep_np.output)
+
+
+def test_pallas_interpret_parity_with_xla(rng):
+    """kernel='pallas' (interpret=True on CPU) and kernel='xla' run the
+    same gather/pad/bucket semantics; both match the oracle."""
+    g = cm.GEMM(m=160, n=256, q=144)
+    devs = sample_fleet(8, np.random.default_rng(0))
+    plan = cm.solve_gemm(g, devs)
+    A, B = _ab(rng, g)
+    want = _oracle(A, B)
+    rep_p = jax_executor.execute_plan_jax(g, plan, A, B, devs, rng=0,
+                                          kernel="pallas")
+    rep_x = jax_executor.execute_plan_jax(g, plan, A, B, devs, rng=0,
+                                          kernel="xla")
+    assert rep_p.kernel == "pallas" and rep_x.kernel == "xla"
+    _assert_close(rep_p.output, want)
+    _assert_close(rep_x.output, want)
+    _assert_close(rep_p.output, rep_x.output)
+
+
+@pytest.mark.parametrize("kernel", ["xla", "pallas"])
+def test_backend_equivalence_under_failure(kernel, rng):
+    g = cm.GEMM(m=192, n=384, q=192)
+    devs = sample_fleet(12, np.random.default_rng(0))
+    plan = cm.solve_gemm(g, devs)
+    victims = sorted({a.device_id for a in plan.assignments})[:2]
+    A, B = _ab(rng, g)
+    want = _oracle(A, B)
+    rep_np = executor.execute_plan(g, plan, A, B, devs, fail_ids=victims,
+                                   rng=0)
+    rep_jx = jax_executor.execute_plan_jax(g, plan, A, B, devs,
+                                           fail_ids=victims, rng=0,
+                                           kernel=kernel)
+    assert rep_np.n_recovered == rep_jx.n_recovered > 0
+    assert [r for r, _ in rep_np.recovery.patches] \
+        == [r for r, _ in rep_jx.recovery.patches]
+    _assert_close(rep_np.output, _exact(A, B), rtol=1e-9)
+    _assert_close(rep_jx.output, want)
+
+
+def test_backend_equivalence_fail_plus_corrupt(rng):
+    """Worst case: one device fails mid-level while another poisons its
+    block.  Freivalds catches the corruption, recovery fills the hole, and
+    both backends still equal the oracle."""
+    g = cm.GEMM(m=256, n=512, q=256)
+    devs = sample_fleet(16, np.random.default_rng(0))
+    plan = cm.solve_gemm(g, devs)
+    ids = sorted({a.device_id for a in plan.assignments})
+    victim, bad = ids[0], ids[1]
+    A, B = _ab(rng, g)
+    want = _oracle(A, B)
+    rep_np = executor.execute_plan(g, plan, A, B, devs, fail_ids=[victim],
+                                   corrupt_ids=[bad], rng=0)
+    rep_jx = jax_executor.execute_plan_jax(g, plan, A, B, devs,
+                                           fail_ids=[victim],
+                                           corrupt_ids=[bad], rng=0,
+                                           kernel="xla")
+    assert not rep_np.verified and not rep_jx.verified   # poisoning caught
+    _assert_close(rep_np.output, _exact(A, B), rtol=1e-9)  # ...and healed
+    _assert_close(rep_jx.output, want)
+
+
+def test_corrupt_device_with_degenerate_rect(rng):
+    """A corrupting device that also owns a degenerate (zero-area)
+    rectangle must not crash the injection path on either backend; its
+    real block is still caught and healed."""
+    devs = sample_fleet(6, np.random.default_rng(0))
+    g = cm.GEMM(m=128, n=128, q=128)
+    base = cm.solve_gemm(g, devs)
+    bad = base.assignments[0].device_id
+    plan = cm.Plan(
+        gemm=g,
+        assignments=[cm.Assignment(device_id=bad, r0=0, r1=0, c0=0, c1=0)]
+        + list(base.assignments),
+        makespan=base.makespan, lower_bound=base.lower_bound)
+    A, B = _ab(rng, g)
+    for rep in (
+            executor.execute_plan(g, plan, A, B, devs, corrupt_ids=[bad],
+                                  rng=0),
+            jax_executor.execute_plan_jax(g, plan, A, B, devs,
+                                          corrupt_ids=[bad], rng=0,
+                                          kernel="xla")):
+        assert not rep.verified
+        _assert_close(rep.output, _exact(A, B))
+
+
+def test_backend_equivalence_n_split_plan(rng):
+    """Tiny device memory forces the contraction-dim split (n_split > 1);
+    the executors run the same full-n rectangles regardless."""
+    g = cm.GEMM(m=64, n=4096, q=64)
+    devs = [dataclasses.replace(d, memory=300e3)
+            for d in sample_fleet(4, np.random.default_rng(0))]
+    plan = cm.solve_gemm(g, devs)
+    assert plan.n_split > 1
+    A, B = _ab(rng, g)
+    want = _oracle(A, B)
+    rep_np = executor.execute_plan(g, plan, A, B, devs, rng=0)
+    rep_jx = jax_executor.execute_plan_jax(g, plan, A, B, devs, rng=0,
+                                           kernel="xla")
+    _assert_close(rep_np.output, _exact(A, B), rtol=1e-9)
+    _assert_close(rep_jx.output, want)
+
+
+def test_bf16_policy_runs_with_matching_tolerance(rng):
+    """The MXU-native bf16-compute/f32-accumulate policy stays within bf16
+    rounding of the oracle and self-verifies (no false Freivalds trips)."""
+    g = cm.GEMM(m=128, n=256, q=128)
+    devs = sample_fleet(8, np.random.default_rng(0))
+    plan = cm.solve_gemm(g, devs)
+    A, B = _ab(rng, g)
+    rep = jax_executor.execute_plan_jax(g, plan, A, B, devs, rng=0,
+                                        kernel="xla", policy="bf16")
+    assert rep.verified and rep.policy == "bf16"
+    _assert_close(rep.output, _oracle(A, B), rtol=3e-2)
+
+
+# --------------------------------------------------- runtime integration ---
+
+@pytest.fixture
+def rt():
+    return CleaveRuntime(arch="opt-13b", fleet=Fleet.sample(12, seed=0))
+
+
+def test_execute_step_backend_dispatch(rt, rng):
+    g = cm.GEMM(m=160, n=200, q=150)
+    A, B = _ab(rng, g)
+    want = _oracle(A, B)
+    s_np = rt.execute_step(A, B, gemm=g)
+    s_jx = rt.execute_step(A, B, gemm=g, backend="jax", kernel="xla")
+    assert s_np.backend == "numpy" and s_jx.backend == "jax"
+    assert s_jx.kernel == "xla" and s_jx.gflops > 0
+    assert s_jx.plan_cached         # both backends share the plan cache
+    _assert_close(s_np.output, _exact(A, B), rtol=1e-9)
+    _assert_close(s_jx.output, want)
+    with pytest.raises(ValueError, match="backend"):
+        rt.execute_step(A, B, gemm=g, backend="torch")
+
+
+def test_execute_step_jax_failure_round_trip(rt, rng):
+    g = cm.GEMM(m=192, n=256, q=192)
+    plan = rt.plan_gemm(g)
+    victim = plan.assignments[0].device_id
+    A, B = _ab(rng, g)
+    s = rt.execute_step(A, B, gemm=g, backend="jax", fail_ids=[victim])
+    assert s.n_recovered > 0 and s.verified
+    _assert_close(s.output, _oracle(A, B))
+
+
+def test_execute_level_runs_dag_level(rt, rng):
+    gs = [cm.GEMM(m=128, n=160, q=96), cm.GEMM(m=96, n=128, q=64)]
+    pairs = [_ab(rng, g) for g in gs]
+    for backend in ("numpy", "jax"):
+        rep = rt.execute_level(pairs, gemms=gs, backend=backend,
+                               kernel="xla")
+        assert rep.verified and len(rep.steps) == 2
+        assert rep.predicted_makespan > 0     # engine.price_plan pricing
+        for (A, B), s in zip(pairs, rep.steps):
+            _assert_close(s.output, _oracle(A, B))
+    with pytest.raises(ValueError, match="pairs"):
+        rt.execute_level(pairs, gemms=gs[:1])
+
+
+def test_execute_batch_level_walk(rng):
+    """The priced DAG actually runs, level by level, on both backends."""
+    from repro.configs.base import get_config
+    cfg = get_config("opt-13b").reduced(n_layers=1, vocab_size=256)
+    rt = CleaveRuntime(arch=cfg, fleet=Fleet.sample(8, seed=0))
+    rep_np = rt.execute_batch(2, 16, backend="numpy", max_levels=3, seed=5)
+    rep_jx = rt.execute_batch(2, 16, backend="jax", kernel="xla",
+                              max_levels=3, seed=5)
+    assert rep_np.verified and rep_jx.verified
+    assert rep_np.n_levels == rep_jx.n_levels == 3
+    assert rep_np.n_tasks == rep_jx.n_tasks > 0
+    assert rep_jx.predicted_gemm_time > 0
+    # same seed => same operands => the two backends agree per step
+    for lev_np, lev_jx in zip(rep_np.levels, rep_jx.levels):
+        for s_np, s_jx in zip(lev_np.steps, lev_jx.steps):
+            _assert_close(s_jx.output, s_np.output)
+    assert [h["event"] for h in rt.history[-2:]] \
+        == ["execute_level", "execute_batch"]
