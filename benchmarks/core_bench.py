@@ -19,11 +19,15 @@ import platform
 import time
 
 # (arch, n_devices, batch, seq) — fixed matrix; keep stable across PRs so
-# the numbers stay comparable.
+# the numbers stay comparable.  The 1024/4096-device rows track the
+# vectorized (DeviceTable) planner's fleet scaling — the paper's
+# thousands-of-devices regime.
 MATRIX = (
     ("opt-13b", 64, 128, 1024),
     ("opt-13b", 256, 128, 1024),
     ("llama2-13b", 256, 128, 1024),
+    ("opt-13b", 1024, 128, 1024),
+    ("opt-13b", 4096, 128, 1024),
 )
 
 MIN_CACHE_SPEEDUP = 10.0
@@ -68,20 +72,24 @@ def bench_core(matrix=MATRIX, include_kernels: bool = False) -> dict:
 
 
 # (m, n, q, n_devices) — executor throughput shapes; stable across PRs.
-# MXU-scale rectangles (>=256 per side) so the batched kernel grid is
-# compute-bound rather than padding-bound.
+# MXU-scale rectangles (>=256 per side) at fleet-scale device counts, so
+# the numbers exercise what the batched band launches + device-side
+# Freivalds are for: many blocks per level, every block verified.
 EXECUTOR_SHAPES = (
-    (1024, 2048, 1024, 16),
-    (2048, 2048, 512, 16),
+    (1024, 2048, 1024, 64),
+    (2048, 2048, 512, 64),
+    (1024, 1024, 1024, 256),
 )
 
 
 def bench_executor(shapes=EXECUTOR_SHAPES, reps: int = 3) -> dict:
-    """Per-backend executor throughput: the same solved plan's rectangles
-    run through the numpy (f64 host) executor and the jax executor
-    (compiled path — XLA on CPU, Pallas grid on TPU), GFLOP/s and tasks/s
-    each.  verify=False so the number is pure schedule execution, not
-    Freivalds overhead (which is identical numpy work for both)."""
+    """Per-backend *verified* executor throughput: the same solved plan's
+    rectangles run through the numpy (f64 host) executor and the jax
+    executor (compiled path — XLA on CPU, Pallas grid on TPU), GFLOP/s and
+    tasks/s each, with Freivalds verification ENABLED on both — the numpy
+    backend pays the host-side per-block oracle, the jax backend emits
+    per-block residuals inside the batched bucket launches (device-side
+    Freivalds), so the ratio measures end-to-end verified execution."""
     import numpy as np
 
     from repro.api import CleaveRuntime, Fleet
@@ -98,12 +106,13 @@ def bench_executor(shapes=EXECUTOR_SHAPES, reps: int = 3) -> dict:
         row = {"m": m, "n": n, "q": q, "devices": n_dev}
         for backend in ("numpy", "jax"):
             rt.execute_step(A, B, gemm=g, backend=backend,
-                            verify=False)          # warm plan cache + jit
+                            verify=True)           # warm plan cache + jit
             t0 = time.perf_counter()
             for _ in range(reps):
                 step = rt.execute_step(A, B, gemm=g, backend=backend,
-                                       verify=False)
+                                       verify=True)
             dt = (time.perf_counter() - t0) / reps
+            assert step.verified
             row[backend] = {
                 "exec_s": round(dt, 5),
                 "gflops": round(flops / dt / 1e9, 2),
@@ -115,6 +124,7 @@ def bench_executor(shapes=EXECUTOR_SHAPES, reps: int = 3) -> dict:
     min_x = min(r["jax_vs_numpy_x"] for r in rows)
     return {
         "shapes": rows,
+        "verify": True,
         "min_jax_vs_numpy_x": min_x,
         "jax_ge_numpy": bool(min_x >= 1.0),
     }
@@ -156,6 +166,77 @@ def bench_event_engine(arch: str = "opt-13b", n_devices: int = 64,
         "analytic_match_rel": rel,
         "analytic_match_ok": bool(rel < 1e-6),
     }
+
+
+# ------------------------------------------------------- regression gate --
+
+# fresh-vs-baseline tolerance: a metric may be up to 1.25x worse than the
+# committed BENCH_core.json before --check fails (shared-runner noise floor)
+CHECK_TOLERANCE = 1.25
+# wall-clock metrics additionally get an absolute slack: the vectorized
+# cold solves are tens of milliseconds, where scheduler jitter on a shared
+# runner routinely exceeds 25% — a real regression (the pre-DeviceTable
+# solver was ~1.5 s at 256 devices) still trips by orders of magnitude
+CHECK_ABS_SLACK_S = 0.05
+
+
+def check_against_baseline(baseline: dict, fresh: dict,
+                           tolerance: float = CHECK_TOLERANCE) -> list:
+    """Compare a fresh core-bench run against the committed baseline.
+    Gated metrics: per-row ``plan_solve_cold_s`` (must not grow past
+    tolerance x), event-engine ``events_per_sec`` and executor
+    ``min_jax_vs_numpy_x`` (must not shrink past 1/tolerance).  Returns a
+    list of ``(name, baseline, fresh, ok)`` comparison rows."""
+    out = []
+    base_rows = {(r["arch"], r["devices"], r["batch"], r["seq"]): r
+                 for r in baseline.get("matrix", ())}
+    for r in fresh.get("matrix", ()):
+        key = (r["arch"], r["devices"], r["batch"], r["seq"])
+        b = base_rows.get(key)
+        name = f"plan_solve_cold_s[{r['arch']}/D={r['devices']}]"
+        if b is None:
+            out.append((name, None, r["plan_solve_cold_s"], True))
+            continue
+        ok = r["plan_solve_cold_s"] <= b["plan_solve_cold_s"] * tolerance \
+            + CHECK_ABS_SLACK_S
+        out.append((name, b["plan_solve_cold_s"], r["plan_solve_cold_s"],
+                    ok))
+    b_ee = baseline.get("event_engine", {}).get("events_per_sec")
+    f_ee = fresh.get("event_engine", {}).get("events_per_sec")
+    if f_ee is not None:
+        ok = b_ee is None or f_ee >= b_ee / tolerance
+        out.append(("events_per_sec", b_ee, f_ee, ok))
+    b_x = baseline.get("executor", {}).get("min_jax_vs_numpy_x")
+    f_x = fresh.get("executor", {}).get("min_jax_vs_numpy_x")
+    if f_x is not None:
+        ok = b_x is None or f_x >= b_x / tolerance
+        out.append(("executor.min_jax_vs_numpy_x", b_x, f_x, ok))
+    return out
+
+
+def check_main(baseline_path: str = "BENCH_core.json",
+               tolerance: float = CHECK_TOLERANCE) -> int:
+    """``benchmarks.run --check``: run a fresh core bench in memory (the
+    committed baseline file is NOT overwritten) and fail on regressions
+    beyond the tolerance.  The nightly CI job runs this before refreshing
+    the artifact, so a perf regression fails the job instead of silently
+    re-baselining."""
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    fresh = bench_core()
+    rows = check_against_baseline(baseline, fresh, tolerance)
+    bad = [r for r in rows if not r[3]]
+    for name, base, now, ok in rows:
+        ref = "(new row)" if base is None else f"baseline={base}"
+        print(f"check/{name}: {ref} fresh={now} "
+              f"{'OK' if ok else f'FAIL (>{tolerance}x regression)'}")
+    if bad:
+        print(f"--check: {len(bad)} metric(s) regressed beyond "
+              f"{tolerance}x vs {baseline_path}")
+        return 1
+    print(f"--check: all {len(rows)} gated metrics within {tolerance}x "
+          f"of {baseline_path}")
+    return 0
 
 
 def write_bench_core(out_path: str = "BENCH_core.json",

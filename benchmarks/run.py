@@ -6,6 +6,10 @@ Usage:
     PYTHONPATH=src python -m benchmarks.run --core   # perf tracker:
         writes BENCH_core.json (batch-time + plan-solve wall-clock matrix,
         asserts plan-cache reuse >=10x) and exits.
+    PYTHONPATH=src python -m benchmarks.run --check  # regression gate:
+        fresh run vs the committed BENCH_core.json (plan_solve_cold_s,
+        events_per_sec, executor min_jax_vs_numpy_x; 1.25x tolerance),
+        non-zero exit on regression.  Run by the nightly CI job.
 """
 from __future__ import annotations
 
@@ -27,7 +31,22 @@ def main() -> None:
                     help="with --core: also fold the kernel microbench "
                          "rows into BENCH_core.json (nightly job)")
     ap.add_argument("--core-out", default="BENCH_core.json")
+    ap.add_argument("--check", action="store_true",
+                    help="regression gate: run a fresh core bench and "
+                         "compare plan_solve_cold_s / events_per_sec / "
+                         "executor min_jax_vs_numpy_x against the "
+                         "committed BENCH_core.json (1.25x tolerance); "
+                         "exits non-zero on regression without touching "
+                         "the baseline file")
+    ap.add_argument("--check-tolerance", type=float, default=None,
+                    help="override the --check regression tolerance")
     args = ap.parse_args()
+
+    if args.check:
+        from benchmarks.core_bench import CHECK_TOLERANCE, check_main
+        sys.exit(check_main(args.core_out,
+                            tolerance=args.check_tolerance
+                            or CHECK_TOLERANCE))
 
     if args.core or args.core_kernels:
         from benchmarks.core_bench import main as core_main

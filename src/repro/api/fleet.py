@@ -14,7 +14,7 @@ from typing import Iterable, Iterator, List, Optional, Sequence
 import numpy as np
 
 from repro.core import churn
-from repro.core.cost_model import Device
+from repro.core.cost_model import Device, DeviceTable
 from repro.sim import devices as fleet_mod
 
 
@@ -25,6 +25,8 @@ class Fleet:
                  seed: Optional[int] = None):
         self.devices: List[Device] = list(devices)
         self.seed = seed
+        self._table: Optional[DeviceTable] = None
+        self._homog_table: Optional[DeviceTable] = None
 
     # ------------------------------------------------------------ builders --
 
@@ -61,6 +63,22 @@ class Fleet:
         for d in sorted(self.devices, key=lambda d: d.device_id):
             h.update(struct.pack("<q6d", d.device_id, *d.as_row()))
         return h.hexdigest()
+
+    def table(self) -> DeviceTable:
+        """The struct-of-arrays fleet view the vectorized planner consumes.
+        Built once per ``Fleet`` instance (fleets are immutable by
+        convention — churn transitions return new fleets, so the cached
+        table can never go stale)."""
+        if self._table is None:
+            self._table = DeviceTable.from_devices(self.devices)
+        return self._table
+
+    def homogenized_table(self) -> DeviceTable:
+        """Equal-capability idealization of :meth:`table` (Table 9
+        ablation), cached alongside it."""
+        if self._homog_table is None:
+            self._homog_table = self.table().homogenized()
+        return self._homog_table
 
     def stats(self) -> dict:
         return fleet_mod.fleet_stats(self.devices)

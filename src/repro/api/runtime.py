@@ -41,7 +41,7 @@ import numpy as np
 from repro.configs.base import get_config
 from repro.core import churn, cost_model as cm, executor
 from repro.core.gemm_dag import GemmDag, build_dag
-from repro.core.scheduler import (SchedulePlan, _homogenize, plan_shape_key,
+from repro.core.scheduler import (SchedulePlan, plan_shape_key,
                                   reprice_plan, schedule, solve_level_gemm)
 from repro.api.accounting import (AccountingResult, AccountingStrategy,
                                   get_accounting)
@@ -203,6 +203,10 @@ class CleaveRuntime:
         self._plan_caches: Dict[Tuple[str, bool], Dict[tuple, cm.Plan]] = {}
         # (request, fleet_signature) -> solved SchedulePlan
         self._sched_cache: Dict[Tuple[PlanRequest, str], SchedulePlan] = {}
+        # device-resident padded-operand cache for the jax step loop
+        # (kernels.ops.PadCache, created lazily so numpy-only sessions
+        # never import jax)
+        self._pad_cache = None
 
     # ---------------------------------------------------------------- plan --
 
@@ -229,7 +233,7 @@ class CleaveRuntime:
             shapes = {plan_shape_key(g) + (g.count,) for g in dag.gemms}
             hits = sum(1 for k in shapes if k in cache)
             misses = len(shapes) - hits
-            sp = schedule(dag, self.fleet.devices, ps=self.ps,
+            sp = schedule(dag, self.fleet.table(), ps=self.ps,
                           heterogeneity_aware=request.heterogeneity_aware,
                           plan_cache=cache)
             self._sched_cache[sched_key] = sp
@@ -308,10 +312,14 @@ class CleaveRuntime:
             kern, gflops = "", 0.0
         elif backend == "jax":
             from repro.core import jax_executor
+            if self._pad_cache is None:
+                from repro.kernels.ops import PadCache
+                self._pad_cache = PadCache()
             rep = jax_executor.execute_plan_jax(
-                gemm, plan, A, B, self.fleet.devices, fail_ids=fail_ids,
+                gemm, plan, A, B, self.fleet.table(), fail_ids=fail_ids,
                 corrupt_ids=corrupt_ids, rng=self.rng, verify=verify,
-                policy=dtype_policy, kernel=kernel)
+                policy=dtype_policy, kernel=kernel,
+                pad_cache=self._pad_cache)
             kern, gflops = rep.kernel, rep.gflops
         else:
             raise ValueError(f"unknown executor backend {backend!r}; "
@@ -438,7 +446,7 @@ class CleaveRuntime:
         new_fleet = self.fleet.without(failed)
         if not len(new_fleet):
             raise RuntimeError("no surviving devices")
-        survivors = new_fleet.devices
+        survivors = new_fleet.table()   # one SoA view for every patch solve
         old_sig, new_sig = self.fleet.signature(), new_fleet.signature()
         t0 = time.perf_counter()
         patched = carried = dropped = 0
@@ -464,7 +472,7 @@ class CleaveRuntime:
                     worst_time = max(worst_time, rec.recovery_time)
                     worst_frac = max(worst_frac, rec.recomputed_fraction)
         report = ChurnReport(
-            failed_ids=sorted(failed), n_survivors=len(survivors),
+            failed_ids=sorted(failed), n_survivors=len(new_fleet),
             n_plans_patched=patched, n_plans_carried=carried,
             n_plans_dropped=dropped,
             recovery_time=worst_time, recomputed_fraction=worst_frac,
@@ -634,10 +642,10 @@ class CleaveRuntime:
         # heterogeneity setting — so cache entries are identical regardless
         # of whether plan(), plan_gemm(), or execute_step() created them
         if het:
-            plan = solve_level_gemm(gemm, self.fleet.devices)
+            plan = solve_level_gemm(gemm, self.fleet.table())
         else:
-            plan = solve_level_gemm(gemm, _homogenize(self.fleet.devices))
-            reprice_plan(plan, self.fleet.devices)
+            plan = solve_level_gemm(gemm, self.fleet.homogenized_table())
+            reprice_plan(plan, self.fleet.table())
         cache[key] = plan
         return plan, False
 
@@ -645,7 +653,7 @@ class CleaveRuntime:
 # ------------------------------------------------------------ plan patching --
 
 def _patch_plan(plan: cm.Plan, failed: set,
-                survivors: Sequence[cm.Device]
+                survivors: cm.Fleetlike
                 ) -> Optional[Tuple[cm.Plan, Optional[churn.RecoveryResult]]]:
     """Carry one cached plan across a churn event: survivors keep their
     rectangles; each orphaned rectangle is re-solved over the survivors with
@@ -658,9 +666,10 @@ def _patch_plan(plan: cm.Plan, failed: set,
     if not orphans:
         # untouched by this failure; reuse under the new signature
         return plan, None
+    table = cm.DeviceTable.ensure(survivors)
     hit = sorted(failed & {a.device_id for a in plan.assignments})
     event = churn.FailureEvent(gemm=plan.gemm, failed_ids=hit, plan=plan)
-    rec = churn.recover(event, survivors)
+    rec = churn.recover(event, table)
     assignments = [a for a in plan.assignments if a.device_id not in failed]
     # iterate the (rect, patch) pairs — recover() may skip degenerate
     # orphans, so zipping against `orphans` could misalign patch offsets
@@ -673,8 +682,7 @@ def _patch_plan(plan: cm.Plan, failed: set,
     active = {a.device_id for a in assignments}
     new_plan = cm.Plan(
         gemm=plan.gemm, assignments=assignments, makespan=0.0,
-        lower_bound=cm.lower_bound(plan.gemm, survivors),
-        excluded=[d.device_id for d in survivors
-                  if d.device_id not in active])
-    new_plan.makespan = cm.plan_makespan(plan.gemm, survivors, new_plan)
+        lower_bound=cm.lower_bound(plan.gemm, table),
+        excluded=[int(i) for i in table.ids if int(i) not in active])
+    new_plan.makespan = cm.plan_makespan(plan.gemm, table, new_plan)
     return new_plan, rec

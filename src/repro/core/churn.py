@@ -66,7 +66,7 @@ def _cache_overlap(plan: cm.Plan, rect: cm.Assignment) -> Dict[int, tuple]:
     return out
 
 
-def recover(event: FailureEvent, devices: Sequence[cm.Device],
+def recover(event: FailureEvent, devices: cm.Fleetlike,
             completed_fraction: float = 0.0) -> RecoveryResult:
     """Re-solve the orphaned shards over surviving devices (Eq. in §4.2).
 
@@ -75,9 +75,17 @@ def recover(event: FailureEvent, devices: Sequence[cm.Device],
     only unfinished work is redistributed)."""
     t0 = time.perf_counter()
     failed = set(event.failed_ids)
-    survivors = [d for d in devices if d.device_id not in failed]
-    if not survivors:
+    tab = cm.DeviceTable.ensure(devices)
+    if failed.isdisjoint(tab.id_index):
+        # caller already passed a survivor fleet (the runtime's churn path
+        # and the executors do): reuse its SoA view outright
+        survivor_table = tab
+    else:
+        survivors = [d for d in tab.devices if d.device_id not in failed]
+        survivor_table = cm.DeviceTable.from_devices(survivors)
+    if not len(survivor_table):
         raise RuntimeError("no surviving devices")
+    # one struct-of-arrays view shared by every orphan re-solve
     orphan_rects = [a for a in event.plan.assignments
                     if a.device_id in failed]
 
@@ -94,7 +102,7 @@ def recover(event: FailureEvent, devices: Sequence[cm.Device],
                       b=event.gemm.b, name=event.gemm.name + ".recovery",
                       level=event.gemm.level, layer=event.gemm.layer)
         caches = _cache_overlap(event.plan, rect)
-        plan = cm.solve_gemm(sub, survivors, caches=caches)
+        plan = cm.solve_gemm(sub, survivor_table, caches=caches)
         patches.append((rect, plan))
         orphan_area += sub.m * sub.q
         recovery_time = max(recovery_time, plan.makespan)

@@ -16,12 +16,21 @@ monotone function s_k(T); binary-search the minimum feasible T with
 partition (row bands × per-band column slices) with largest-remainder integer
 rounding, and the *realized* makespan of that integer plan is returned, so
 reported numbers never rely on the continuous relaxation.
+
+**Fleet-array fast path**: the solver is an array program over a
+:class:`DeviceTable` — a struct-of-arrays view of the fleet (flops / link
+bandwidths / latencies / memory as numpy vectors).  ``feasible(T)`` is one
+fused numpy pass over the whole fleet instead of a per-device Python loop,
+and the Eq. 7 memory-perimeter cap is solved in closed form (the scalar
+reference solver bisected it; the two agree to ~1e-12 relative — the scalar
+code survives as the test oracle in ``tests/_scalar_oracle.py``).  Every
+entry point accepts either a ``DeviceTable`` or a plain device sequence.
 """
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from typing import Dict, Iterable, Optional, Sequence, Union
 
 import numpy as np
 
@@ -40,6 +49,110 @@ class Device:
     def as_row(self):
         return (self.flops, self.dl_bw, self.ul_bw, self.dl_lat,
                 self.ul_lat, self.memory)
+
+
+class DeviceTable:
+    """Struct-of-arrays fleet view: the planner's unit of vectorization.
+
+    Column vectors (float64) over the fleet in device order, plus the
+    aggregate sums Eq. 18's lower bound needs.  Built once per fleet
+    signature (``Fleet.table()`` caches it; ``CleaveRuntime`` plans against
+    that cached table) and shared by every solver entry point.  Construction
+    is O(devices); each ``feasible(T)`` probe over it is a handful of fused
+    numpy passes regardless of fleet size.
+    """
+
+    __slots__ = ("ids", "flops", "dl_bw", "ul_bw", "dl_lat", "ul_lat",
+                 "memory", "lat", "flops_sum", "dl_bw_sum", "ul_bw_sum",
+                 "_devices", "_id_index")
+
+    def __init__(self, ids, flops, dl_bw, ul_bw, dl_lat, ul_lat, memory,
+                 devices: Optional[tuple] = None):
+        self.ids = np.asarray(ids, np.int64)
+        self.flops = np.asarray(flops, np.float64)
+        self.dl_bw = np.asarray(dl_bw, np.float64)
+        self.ul_bw = np.asarray(ul_bw, np.float64)
+        self.dl_lat = np.asarray(dl_lat, np.float64)
+        self.ul_lat = np.asarray(ul_lat, np.float64)
+        self.memory = np.asarray(memory, np.float64)
+        self.lat = np.maximum(self.dl_lat, self.ul_lat)
+        self.flops_sum = float(np.sum(self.flops))
+        self.dl_bw_sum = float(np.sum(self.dl_bw))
+        self.ul_bw_sum = float(np.sum(self.ul_bw))
+        self._devices = devices
+        self._id_index: Optional[Dict[int, int]] = None
+
+    # ------------------------------------------------------------ builders --
+
+    @classmethod
+    def from_devices(cls, devices: Iterable[Device]) -> "DeviceTable":
+        devs = tuple(devices)
+        rows = np.array([d.as_row() for d in devs], np.float64) \
+            if devs else np.zeros((0, 6), np.float64)
+        return cls(ids=[d.device_id for d in devs],
+                   flops=rows[:, 0], dl_bw=rows[:, 1], ul_bw=rows[:, 2],
+                   dl_lat=rows[:, 3], ul_lat=rows[:, 4], memory=rows[:, 5],
+                   devices=devs)
+
+    @classmethod
+    def ensure(cls, obj: "Fleetlike") -> "DeviceTable":
+        """Coerce a ``DeviceTable`` / ``Fleet`` / device sequence: tables
+        pass through, fleets return their cached table, sequences build."""
+        if isinstance(obj, DeviceTable):
+            return obj
+        table = getattr(obj, "table", None)
+        if callable(table):
+            return table()
+        return cls.from_devices(obj)
+
+    def homogenized(self) -> "DeviceTable":
+        """Idealized equal-capability fleet (Table 9 ablation): mean compute
+        and links, min memory; per-device latencies and ids kept."""
+        n = len(self)
+        return DeviceTable(
+            ids=self.ids,
+            flops=np.full(n, np.mean(self.flops)),
+            dl_bw=np.full(n, np.mean(self.dl_bw)),
+            ul_bw=np.full(n, np.mean(self.ul_bw)),
+            dl_lat=self.dl_lat, ul_lat=self.ul_lat,
+            memory=np.full(n, np.min(self.memory)) if n else self.memory)
+
+    # ------------------------------------------------------------- queries --
+
+    def __len__(self) -> int:
+        return len(self.ids)
+
+    @property
+    def devices(self) -> tuple:
+        """The fleet as ``Device`` objects (materialized lazily — the solver
+        itself never needs them)."""
+        if self._devices is None:
+            self._devices = tuple(
+                Device(flops=float(self.flops[i]), dl_bw=float(self.dl_bw[i]),
+                       ul_bw=float(self.ul_bw[i]),
+                       dl_lat=float(self.dl_lat[i]),
+                       ul_lat=float(self.ul_lat[i]),
+                       memory=float(self.memory[i]),
+                       device_id=int(self.ids[i]))
+                for i in range(len(self)))
+        return self._devices
+
+    @property
+    def id_index(self) -> Dict[int, int]:
+        if self._id_index is None:
+            self._id_index = {int(d): i for i, d in enumerate(self.ids)}
+        return self._id_index
+
+    def rows_of(self, device_ids: Iterable[int]) -> np.ndarray:
+        idx = self.id_index
+        return np.fromiter((idx[int(i)] for i in device_ids), np.int64)
+
+
+Fleetlike = Union[DeviceTable, Sequence[Device]]
+
+
+def _as_table(devices: Fleetlike) -> DeviceTable:
+    return DeviceTable.ensure(devices)
 
 
 @dataclass(frozen=True)
@@ -113,7 +226,8 @@ class Plan:
 def device_cost(gemm: GEMM, dev: Device, alpha: float, beta: float,
                 rows_cached: float = 0.0, cols_cached: float = 0.0):
     """Eq. (2)-(4) with cache-aware DL discount (§4.2).  Returns
-    (total, dl, ul, comp)."""
+    (total, dl, ul, comp).  Scalar form — the vectorized equivalents live
+    in :func:`plan_makespan` / :func:`_max_share_vec`."""
     if alpha <= 0 or beta <= 0:
         return 0.0, 0.0, 0.0, 0.0
     a_dl = max(alpha - rows_cached, 0.0)
@@ -133,101 +247,139 @@ def instance_time(gemm: GEMM, dev: Device) -> float:
                gemm.flops / dev.flops)
 
 
-def plan_makespan(gemm: GEMM, devices: Sequence[Device], plan: Plan) -> float:
-    t = 0.0
-    dev_by_id = {d.device_id: d for d in devices}
-    for a in plan.assignments:
-        c, *_ = device_cost(gemm, dev_by_id[a.device_id], a.alpha, a.beta)
-        t = max(t, c)
-    return t
+def _instance_time_vec(gemm: GEMM, tab: DeviceTable) -> np.ndarray:
+    return np.maximum(np.maximum(gemm.in_bytes / tab.dl_bw,
+                                 gemm.out_bytes / tab.ul_bw),
+                      gemm.flops / tab.flops)
 
 
-def lower_bound(gemm: GEMM, devices: Sequence[Device]) -> float:
+def plan_makespan(gemm: GEMM, devices: Fleetlike, plan: Plan) -> float:
+    """Realized makespan of an integer plan: one fused pass over the
+    assignment rectangles (device parameters gathered from the table)."""
+    if not plan.assignments:
+        return 0.0
+    tab = _as_table(devices)
+    idx = tab.rows_of(a.device_id for a in plan.assignments)
+    al = np.fromiter((a.r1 - a.r0 for a in plan.assignments), np.int64)
+    be = np.fromiter((a.c1 - a.c0 for a in plan.assignments), np.int64)
+    n, b = gemm.n, gemm.b
+    dl = (al * n + n * be) * b / tab.dl_bw[idx] + tab.dl_lat[idx]
+    ul = al * be * b / tab.ul_bw[idx] + tab.ul_lat[idx]
+    comp = 2.0 * al * be * n / tab.flops[idx]
+    total = np.maximum(np.maximum(dl, ul), comp)
+    total = np.where((al > 0) & (be > 0), total, 0.0)
+    return float(np.max(total))
+
+
+def lower_bound(gemm: GEMM, devices: Fleetlike) -> float:
     """Appendix B Eq. (18) extended with link capacity terms."""
-    W = gemm.flops
-    F = sum(d.flops for d in devices)
-    t_comp = W / F
+    tab = _as_table(devices)
+    t_comp = gemm.flops / tab.flops_sum
     # aggregate input dispatch over total DL; output over total UL
-    t_dl = gemm.in_bytes / sum(d.dl_bw for d in devices)
-    t_ul = gemm.out_bytes / sum(d.ul_bw for d in devices)
+    t_dl = gemm.in_bytes / tab.dl_bw_sum
+    t_ul = gemm.out_bytes / tab.ul_bw_sum
     return max(t_comp, t_dl, t_ul)
 
 
 # ----------------------------------------------------------------- solver --
 
-def _max_share(gemm: GEMM, dev: Device, T: float,
-               rows_cached: float = 0.0, cols_cached: float = 0.0):
-    """Largest output share s = αβ/(mq) device can finish within T, with the
-    balanced-aspect block choice; returns (s, alpha, beta)."""
+def _mem_cap_perimeter(gemm: GEMM, M: np.ndarray) -> np.ndarray:
+    """Closed-form largest perimeter P with Eq. 7 memory feasibility
+    ``P·n·b + area(P)·b ≤ M``, where ``area(P)`` is the balanced-aspect
+    block area ``min(m, P/2) · min(q, P − min(m, P/2))`` — piecewise
+    quadratic/linear in P, so g(P) inverts exactly (the scalar oracle
+    bisected this to 2^-40; agreement is ~1e-12 relative)."""
     m, n, q, b = gemm.m, gemm.n, gemm.q, gemm.b
-    lat = max(dev.dl_lat, dev.ul_lat)
-    if T <= lat:
-        return 0.0, 0.0, 0.0
+    nb = float(n) * b
+    if m <= q:
+        PA_hi, PB_hi = 2.0 * m, float(m + q)
+        gA_hi = nb * PA_hi + (PA_hi * PA_hi / 4.0) * b
+        gB_hi = nb * PB_hi + float(m) * q * b
+        P_B = (M + b * float(m) * m) / (b * (n + m))
+    else:
+        PA_hi, PB_hi = 2.0 * q, 2.0 * m
+        gA_hi = nb * PA_hi + (PA_hi * PA_hi / 4.0) * b
+        gB_hi = nb * PB_hi + float(m) * q * b
+        P_B = M / (nb + b * q / 2.0)
+    P_A = 2.0 * (np.sqrt(nb * nb + b * M) - nb) / b
+    P_C = (M - b * float(m) * q) / nb
+    return np.where(M <= gA_hi, P_A, np.where(M <= gB_hi, P_B, P_C))
+
+
+def _max_share_vec(gemm: GEMM, tab: DeviceTable, T: float,
+                   rows_cached: Optional[np.ndarray] = None,
+                   cols_cached: Optional[np.ndarray] = None):
+    """Vectorized :mod:`tests._scalar_oracle` ``max_share_ref``: the largest
+    output share s = αβ/(mq) every device can finish within T, with the
+    balanced-aspect block choice — one fused numpy pass over the fleet.
+    Returns ``(s, alpha, beta)`` vectors."""
+    m, n, q, b = gemm.m, gemm.n, gemm.q, gemm.b
+    mq = float(m) * q
+    rc = 0.0 if rows_cached is None else rows_cached
+    cc = 0.0 if cols_cached is None else cols_cached
     # perimeter cap from DL time: (α - rc + β - cc) n b / Wd + Ld <= T
-    P_dl = (T - dev.dl_lat) * dev.dl_bw / (n * b) + rows_cached + cols_cached
+    P_dl = (T - tab.dl_lat) * tab.dl_bw / (n * b) + rc + cc
     # area caps
-    A_ul = (T - dev.ul_lat) * dev.ul_bw / b
-    A_comp = T * dev.flops / (2.0 * n)
-    # memory: (α + β) n b + α β b <= M  ->  with α+β = P: P n b + A b <= M
-    # binary search the largest feasible perimeter P under memory + DL
-    def area_given_P(P):
-        # maximize αβ s.t. α+β <= P, α <= m, β <= q
-        half = P / 2.0
-        a = min(m, half)
-        bb = min(q, P - a)
-        if bb > q:
-            bb = q
-            a = min(m, P - q)
-        return max(a, 0.0) * max(bb, 0.0), a, bb
-
-    P_hi = min(P_dl, float(m + q))
-    if P_hi <= 0:
-        return 0.0, 0.0, 0.0
-    # memory feasibility is monotone in P: shrink until it fits
-    lo, hi = 0.0, P_hi
-    for _ in range(40):
-        mid = 0.5 * (lo + hi)
-        area, _, _ = area_given_P(mid)
-        if mid * n * b + area * b <= dev.memory:
-            lo = mid
-        else:
-            hi = mid
-    P = lo
-    area, a, bb = area_given_P(P)
-    area = min(area, A_ul, A_comp, float(m) * q)
-    if area <= 0:
-        return 0.0, 0.0, 0.0
+    A_ul = (T - tab.ul_lat) * tab.ul_bw / b
+    A_comp = T * tab.flops / (2.0 * n)
+    P_hi = np.minimum(P_dl, float(m + q))
+    ok = (T > tab.lat) & (P_hi > 0)
+    # memory: (α + β) n b + α β b <= M, closed-form perimeter cap (Eq. 7)
+    P = np.minimum(P_hi, _mem_cap_perimeter(gemm, tab.memory))
+    # maximize αβ s.t. α+β <= P, α <= m, β <= q
+    a = np.minimum(float(m), P / 2.0)
+    bb = np.minimum(float(q), P - a)
+    area = np.maximum(a, 0.0) * np.maximum(bb, 0.0)
+    area = np.minimum(np.minimum(np.minimum(area, A_ul), A_comp), mq)
+    ok &= area > 0
+    areap = np.where(ok, area, 1.0)        # dummy value keeps lanes NaN-free
     # re-balance α,β to the capped area while honoring α+β <= P
-    r = np.sqrt(area)
-    a2 = min(m, max(r, area / q))
-    b2 = area / a2
-    if a2 + b2 > P + 1e-9:   # shouldn't happen; clamp
-        b2 = max(P - a2, 0.0)
-        area = a2 * b2
-    return area / (float(m) * q), a2, b2
+    r = np.sqrt(areap)
+    a2 = np.minimum(float(m), np.maximum(r, areap / q))
+    b2 = areap / a2
+    over = a2 + b2 > P + 1e-9
+    b2 = np.where(over, np.maximum(P - a2, 0.0), b2)
+    areap = np.where(over, a2 * b2, areap)
+    zero = np.zeros_like(areap)
+    return (np.where(ok, areap / mq, zero), np.where(ok, a2, zero),
+            np.where(ok, b2, zero))
 
 
-def solve_gemm(gemm: GEMM, devices: Sequence[Device],
+def _cache_vectors(tab: DeviceTable, caches: Optional[dict]):
+    if not caches:
+        return None, None
+    rc = np.zeros(len(tab))
+    cc = np.zeros(len(tab))
+    idx = tab.id_index
+    for did, (r, c) in caches.items():
+        i = idx.get(int(did))
+        if i is not None:
+            rc[i] = r
+            cc[i] = c
+    return rc, cc
+
+
+def solve_gemm(gemm: GEMM, devices: Fleetlike,
                caches: Optional[dict] = None,
                tol: float = 1e-3) -> Plan:
     """Binary-search the makespan; realize shares as an exact integer grid
     partition.  `caches`: device_id -> (rows_cached, cols_cached) for the
-    churn-recovery reuse (§4.2)."""
-    caches = caches or {}
-    lb = lower_bound(gemm, devices)
+    churn-recovery reuse (§4.2).  ``devices`` may be a :class:`DeviceTable`
+    (the fast path — reused across the bisection) or any device sequence."""
+    tab = _as_table(devices)
+    rc, cc = _cache_vectors(tab, caches)
+    lb = lower_bound(gemm, tab)
     # upper bound: best single device running the whole GEMM
-    ub = min(device_cost(gemm, d, gemm.m, gemm.q)[0] for d in devices)
+    m, n, q, b = gemm.m, gemm.n, gemm.q, gemm.b
+    dl = (m * n + n * q) * b / tab.dl_bw + tab.dl_lat
+    ul = m * q * b / tab.ul_bw + tab.ul_lat
+    comp = 2.0 * m * q * n / tab.flops
+    ub = float(np.min(np.maximum(np.maximum(dl, ul), comp)))
     ub = max(ub, lb * 2, 1e-6)
 
     def feasible(T):
-        tot = 0.0
-        for d in devices:
-            rc, cc = caches.get(d.device_id, (0.0, 0.0))
-            s, _, _ = _max_share(gemm, d, T, rc, cc)
-            tot += s
-            if tot >= 1.0:
-                return True
-        return tot >= 1.0
+        s, _, _ = _max_share_vec(gemm, tab, T, rc, cc)
+        return float(np.sum(s)) >= 1.0
 
     # Memory-infeasible regardless of T (Σ s_k saturates below 1 because the
     # memory constraint Eq. 7 caps every device): split the contraction dim
@@ -239,7 +391,7 @@ def solve_gemm(gemm: GEMM, devices: Sequence[Device],
         half = GEMM(m=gemm.m, n=(gemm.n + 1) // 2, q=gemm.q, b=gemm.b,
                     name=gemm.name, level=gemm.level, layer=gemm.layer,
                     count=gemm.count)
-        sub = solve_gemm(half, devices, caches=caches, tol=tol)
+        sub = solve_gemm(half, tab, caches=caches, tol=tol)
         return Plan(gemm=gemm, assignments=sub.assignments,
                     makespan=2.0 * sub.makespan, lower_bound=lb,
                     excluded=sub.excluded, n_split=2 * sub.n_split)
@@ -259,41 +411,41 @@ def solve_gemm(gemm: GEMM, devices: Sequence[Device],
             break
     T = hi
 
-    shares = []
-    for d in devices:
-        rc, cc = caches.get(d.device_id, (0.0, 0.0))
-        s, a, b = _max_share(gemm, d, T, rc, cc)
-        shares.append((d, s, a, b))
-    total = sum(s for _, s, _, _ in shares)
+    s, a, bshare = _max_share_vec(gemm, tab, T, rc, cc)
+    total = float(np.sum(s))
     # scale shares down to exactly 1 (proportional), drop zeros (Eq. 6)
-    shares = [(d, s / total, a, b) for d, s, a, b in shares if s > 1e-12]
-    excluded = [d.device_id for d in devices
-                if d.device_id not in {x[0].device_id for x in shares}]
-
-    assignments = _grid_partition(gemm, shares)
+    keep = np.nonzero(s > 1e-12)[0]
+    ids = tab.ids
+    excluded = [int(ids[i]) for i in range(len(tab)) if s[i] <= 1e-12]
+    assignments = _grid_partition(
+        gemm, ids[keep], s[keep] / total)
     plan = Plan(gemm=gemm, assignments=assignments, makespan=0.0,
                 lower_bound=lb, excluded=excluded)
-    plan.makespan = plan_makespan(gemm, devices, plan)
+    plan.makespan = plan_makespan(gemm, tab, plan)
     return plan
 
 
-def _grid_partition(gemm: GEMM, shares) -> list:
+def _grid_partition(gemm: GEMM, ids: np.ndarray, shares: np.ndarray) -> list:
     """Partition the m x q output into exact integer rectangles matching the
     given shares: devices grouped into row bands (heights by band share),
-    column slices within each band (widths by within-band share)."""
+    column slices within each band (widths by within-band share).  The
+    greedy band balancing pops the least-loaded band from a heap —
+    identical placement to an argmin scan (ties resolve to the lowest band
+    index in both), O(D log D) instead of O(D · bands)."""
+    import heapq
     m, q = gemm.m, gemm.q
     D = len(shares)
     # desired per-device aspect: α from solver; group devices into bands
     n_bands = int(np.clip(round(np.sqrt(D * m / max(q, 1))), 1, min(D, m)))
-    order = sorted(range(D), key=lambda i: -shares[i][1])
+    order = np.argsort(-shares, kind="stable")
     bands = [[] for _ in range(n_bands)]
-    band_tot = np.zeros(n_bands)
+    heap = [(0.0, j) for j in range(n_bands)]
     for i in order:                      # greedy balance band totals
-        jmin = int(np.argmin(band_tot))
-        bands[jmin].append(i)
-        band_tot[jmin] += shares[i][1]
+        tot, jmin = heapq.heappop(heap)
+        bands[jmin].append(int(i))
+        heapq.heappush(heap, (tot + shares[i], jmin))
     bands = [b for b in bands if b]
-    band_tot = np.array([sum(shares[i][1] for i in b) for b in bands])
+    band_tot = np.array([sum(shares[i] for i in b) for b in bands])
     heights = _largest_remainder(band_tot / band_tot.sum() * m, m)
     # drop zero-height bands, merging their devices into the largest band
     merged = []
@@ -308,13 +460,13 @@ def _grid_partition(gemm: GEMM, shares) -> list:
     assignments = []
     r0 = 0
     for b, h in zip(bands, heights):
-        w_share = np.array([shares[i][1] for i in b])
+        w_share = shares[b]
         widths = _largest_remainder(w_share / w_share.sum() * q, q)
         c0 = 0
         for i, w in zip(b, widths):
             if w > 0 and h > 0:
                 assignments.append(Assignment(
-                    device_id=shares[i][0].device_id,
+                    device_id=int(ids[i]),
                     r0=r0, r1=r0 + h, c0=c0, c1=c0 + w))
             c0 += w
         r0 += h
@@ -330,56 +482,57 @@ def _largest_remainder(real_parts: np.ndarray, total: int) -> list:
     return fl.tolist()
 
 
-def solve_batched(gemm: GEMM, devices: Sequence[Device],
+def solve_batched(gemm: GEMM, devices: Fleetlike,
                   tol: float = 1e-3) -> Plan:
     """Instance-granular scheduling for `count`-many identical independent
     GEMMs at one level (e.g. per-(batch, head) attention GEMMs, per-expert
     MoE GEMMs).  Each device processes whole instances streamed over its
     link (one fixed latency per level, per-instance transfers pipelined);
-    binary-search the level makespan T with w_k(T) instances per device."""
+    binary-search the level makespan T with w_k(T) instances per device —
+    the capacity curve is one fused pass over the fleet table."""
+    tab = _as_table(devices)
     C = gemm.count
     inst_dl = gemm.in_bytes
     inst_ul = gemm.out_bytes
 
-    def inst_time(d: Device):
-        return instance_time(gemm, d)
-
-    fits = [d for d in devices
-            if inst_dl + inst_ul <= d.memory]
-    if not fits:
+    fits = np.nonzero(inst_dl + inst_ul <= tab.memory)[0]
+    if len(fits) == 0:
         # fall back to sub-GEMM decomposition of single instances
-        p = solve_gemm(gemm, devices, tol=tol)
+        p = solve_gemm(gemm, tab, tol=tol)
         p.makespan *= C
         return p
 
-    def cap(d, T):
-        lat = max(d.dl_lat, d.ul_lat)
-        return max(0.0, (T - lat) / inst_time(d))
+    inst = _instance_time_vec(gemm, tab)[fits]
+    lat = tab.lat[fits]
+
+    def caps(T):
+        return np.maximum(0.0, (T - lat) / inst)
 
     lo = 0.0
-    hi = max(d.dl_lat + d.ul_lat for d in fits) + \
-        C * min(inst_time(d) for d in fits)
+    hi = float(np.max(tab.dl_lat[fits] + tab.ul_lat[fits])) + \
+        C * float(np.min(inst))
     for _ in range(60):
         mid = 0.5 * (lo + hi)
-        if sum(cap(d, mid) for d in fits) >= C:
+        if float(np.sum(caps(mid))) >= C:
             hi = mid
         else:
             lo = mid
         if hi - lo < tol * hi:
             break
     T = hi
-    caps = np.array([cap(d, T) for d in fits])
-    w = _largest_remainder(caps / max(caps.sum(), 1e-12) * C, C)
-    assignments = [Assignment(device_id=d.device_id, r0=0, r1=gemm.m,
+    cap_T = caps(T)
+    w = _largest_remainder(cap_T / max(cap_T.sum(), 1e-12) * C, C)
+    ids = tab.ids
+    assignments = [Assignment(device_id=int(ids[i]), r0=0, r1=gemm.m,
                               c0=0, c1=gemm.q)
-                   for d, wi in zip(fits, w) if wi > 0]
-    inst_per_dev = {d.device_id: wi for d, wi in zip(fits, w) if wi > 0}
-    real = max((max(d.dl_lat, d.ul_lat) + wi * inst_time(d))
-               for d, wi in zip(fits, w) if wi > 0)
+                   for i, wi in zip(fits, w) if wi > 0]
+    inst_per_dev = {int(ids[i]): wi for i, wi in zip(fits, w) if wi > 0}
+    warr = np.asarray(w)
+    used = warr > 0
+    real = float(np.max(lat[used] + warr[used] * inst[used]))
     plan = Plan(gemm=gemm, assignments=assignments, makespan=real,
-                lower_bound=lower_bound(gemm, devices),
-                excluded=[d.device_id for d in devices
-                          if d.device_id not in inst_per_dev])
+                lower_bound=lower_bound(gemm, tab),
+                excluded=[int(i) for i in ids if int(i) not in inst_per_dev])
     plan.instances = inst_per_dev
     return plan
 

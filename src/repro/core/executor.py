@@ -5,11 +5,15 @@ exact-semantics claim), including under injected mid-level device failures
 
 This is the CPU stand-in for the device fleet; on TPU the same tile
 decomposition is executed by the Pallas ``block_gemm`` kernel grid.
+:func:`build_task_list` is the single source of task order — surviving
+rectangles in plan order, then ``churn.recover`` patches offset into
+absolute output coordinates — shared with the JAX executor so the two
+backends cannot drift.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Sequence, Union
+from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -27,8 +31,48 @@ class ExecutionReport:
     recovery: Optional[churn.RecoveryResult]
 
 
+@dataclass(frozen=True)
+class TaskRect:
+    """One executable sub-GEMM task: an absolute output rectangle owned by
+    a device, tagged with whether it came from the recovery path."""
+    device_id: int
+    r0: int
+    r1: int
+    c0: int
+    c1: int
+    is_recovery: bool = False
+
+    @property
+    def area(self) -> int:
+        return max(self.r1 - self.r0, 0) * max(self.c1 - self.c0, 0)
+
+
+def build_task_list(gemm: cm.GEMM, plan: cm.Plan, devices: cm.Fleetlike,
+                    fail_ids: Sequence[int] = ()
+                    ) -> Tuple[List[TaskRect], Optional[churn.RecoveryResult]]:
+    """The canonical task order both executor backends run: surviving
+    assignment rectangles in plan order, then — when devices failed —
+    every ``churn.recover`` patch assignment offset by its orphan
+    rectangle's origin (the (rect, patch) pairs keep offsets aligned even
+    when ``recover`` skips degenerate orphans)."""
+    fail = set(fail_ids)
+    tasks = [TaskRect(a.device_id, a.r0, a.r1, a.c0, a.c1, False)
+             for a in plan.assignments if a.device_id not in fail]
+    recovery: Optional[churn.RecoveryResult] = None
+    if fail:
+        event = churn.FailureEvent(gemm=gemm, failed_ids=sorted(fail),
+                                   plan=plan)
+        recovery = churn.recover(event, devices)
+        for rect, patch in recovery.patches:
+            for pa in patch.assignments:
+                tasks.append(TaskRect(
+                    pa.device_id, rect.r0 + pa.r0, rect.r0 + pa.r1,
+                    rect.c0 + pa.c0, rect.c0 + pa.c1, True))
+    return tasks, recovery
+
+
 def execute_plan(gemm: cm.GEMM, plan: cm.Plan, A: np.ndarray, B: np.ndarray,
-                 devices: Sequence[cm.Device],
+                 devices: cm.Fleetlike,
                  fail_ids: Sequence[int] = (),
                  corrupt_ids: Sequence[int] = (),
                  rng: Union[np.random.Generator, int, None] = None,
@@ -47,19 +91,17 @@ def execute_plan(gemm: cm.GEMM, plan: cm.Plan, A: np.ndarray, B: np.ndarray,
     assert A.shape == (m, gemm.n) and B.shape == (gemm.n, q)
     C = np.zeros((m, q), np.float64)
     filled = np.zeros((m, q), bool)
-    fail = set(fail_ids)
     corrupt = set(corrupt_ids)
     verified = True
-    n_tasks = 0
     n_rec = 0
 
-    def run(a: cm.Assignment, base_r=0, base_c=0):
-        nonlocal verified, n_tasks
-        r0, r1, c0, c1 = base_r + a.r0, base_r + a.r1, base_c + a.c0, base_c + a.c1
+    tasks, recovery = build_task_list(gemm, plan, devices, fail_ids)
+    for t in tasks:
+        r0, r1, c0, c1 = t.r0, t.r1, t.c0, t.c1
         Ab = A[r0:r1].astype(np.float64)
         Bb = B[:, c0:c1].astype(np.float64)
         block = Ab @ Bb
-        if a.device_id in corrupt and block.size:
+        if t.device_id in corrupt and block.size:
             block = block.copy()
             block[0, 0] += 1.0 + abs(block[0, 0])
         ok = freivalds(Ab, Bb, block, rng) if verify else True
@@ -69,25 +111,9 @@ def execute_plan(gemm: cm.GEMM, plan: cm.Plan, A: np.ndarray, B: np.ndarray,
         assert not filled[r0:r1, c0:c1].any(), "overlapping assignment"
         C[r0:r1, c0:c1] = block
         filled[r0:r1, c0:c1] = True
-        n_tasks += 1
-
-    for a in plan.assignments:
-        if a.device_id in fail:
-            continue
-        run(a)
-
-    recovery = None
-    if fail:
-        event = churn.FailureEvent(gemm=gemm, failed_ids=sorted(fail),
-                                   plan=plan)
-        recovery = churn.recover(event, devices)
-        # recover() skips empty/fully-completed orphans; the (rect, patch)
-        # pairs keep each patch anchored to its own rectangle's offsets
-        for rect, patch in recovery.patches:
-            for pa in patch.assignments:
-                run(pa, base_r=rect.r0, base_c=rect.c0)
-                n_rec += 1
+        if t.is_recovery:
+            n_rec += 1
 
     assert filled.all(), "coverage violated"
-    return ExecutionReport(output=C, verified=verified, n_tasks=n_tasks,
+    return ExecutionReport(output=C, verified=verified, n_tasks=len(tasks),
                            n_recovered=n_rec, recovery=recovery)

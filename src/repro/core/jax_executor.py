@@ -2,13 +2,16 @@
 through the ``block_gemm`` kernel grid (§3.2 exact-semantics claim, executed
 on the accelerator substrate instead of the numpy stand-in).
 
-Each assignment rectangle becomes one sub-GEMM tile: its A row-band and B
-column-slab are gathered, zero-padded to MXU-aligned blocks, bucketed by
-padded shape, and every bucket runs as ONE batched kernel launch
-(``kernels.ops.plan_gemm``).  Failure, corruption, Freivalds verification,
-and churn recovery follow the numpy executor exactly — same task order,
-same ``churn.recover`` patch pairs, same PS re-dispatch on a failed check —
-so the two backends are drop-in interchangeable behind
+Each assignment rectangle becomes one sub-GEMM tile.  Rectangles sharing a
+row range form a *band* (the grid partition's native structure); bands are
+bucketed by MXU-aligned padded height and every bucket runs as ONE batched
+kernel launch of its gathered A bands against the shared B
+(``kernels.ops.plan_gemm_buckets``), with per-rectangle Freivalds
+residuals emitted device-side in the same launch.  Failure, corruption
+semantics, and churn recovery follow the numpy executor exactly — same
+task order (shared ``executor.build_task_list``), same ``churn.recover``
+patch pairs, same PS re-dispatch on a failed check — so the two backends
+are drop-in interchangeable behind
 ``CleaveRuntime.execute_step(backend=...)``.
 
 Dtype policy: inputs are cast to the policy compute dtype (bfloat16 on TPU —
@@ -22,12 +25,12 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple, Union
+from typing import Sequence, Union
 
 import numpy as np
 
 from repro.core import churn, cost_model as cm
-from repro.core.executor import ExecutionReport
+from repro.core.executor import ExecutionReport, build_task_list
 from repro.core.seeding import as_rng
 from repro.core.verify import freivalds
 
@@ -107,24 +110,38 @@ def _redispatch(Ab: np.ndarray, Bb: np.ndarray,
 
 
 def execute_plan_jax(gemm: cm.GEMM, plan: cm.Plan, A: np.ndarray,
-                     B: np.ndarray, devices: Sequence[cm.Device],
+                     B: np.ndarray, devices: cm.Fleetlike,
                      fail_ids: Sequence[int] = (),
                      corrupt_ids: Sequence[int] = (),
                      rng: Union[np.random.Generator, int, None] = None,
                      verify: bool = True,
                      policy: Union[str, DtypePolicy, None] = None,
                      kernel: str = "auto",
-                     block: int = 128) -> JaxExecutionReport:
+                     block: int = 128,
+                     pad_cache=None) -> JaxExecutionReport:
     """Execute every assignment rectangle on the JAX backend.
 
-    Semantics mirror :func:`repro.core.executor.execute_plan`: devices in
-    ``fail_ids`` vanish before uploading (their rectangles are re-solved via
-    ``churn.recover`` and executed by survivors), devices in ``corrupt_ids``
-    return poisoned blocks that Freivalds verification must catch (the PS
-    then re-dispatches the tile).  ``kernel`` selects the compiled substrate
+    Semantics mirror :func:`repro.core.executor.execute_plan` (the two
+    backends share :func:`repro.core.executor.build_task_list`, so task
+    order cannot drift): devices in ``fail_ids`` vanish before uploading
+    (their rectangles are re-solved via ``churn.recover`` and executed by
+    survivors), devices in ``corrupt_ids`` return poisoned blocks that
+    Freivalds verification must catch (the PS then re-dispatches the tile).
+
+    Verification runs device-side: every bucket launch emits per-block
+    Freivalds residuals alongside the blocks (three extra batched matvecs,
+    see ``kernels.ops._bucket_gemm_verified``), the executor reduces them
+    to a boolean pass-vector against the dtype policy's per-block
+    tolerance, and only flagged blocks fall back to the host
+    :func:`~repro.core.verify.freivalds` oracle (and, when the oracle
+    confirms the failure, a clean PS re-dispatch).  The output scatter is
+    one fancy-indexed write per bucket instead of a per-task Python loop.
+
+    ``kernel`` selects the compiled substrate
     (see :func:`repro.kernels.ops.resolve_plan_kernel`); ``policy`` the
-    compute dtype.  Prefer driving this through
-    ``CleaveRuntime.execute_step(backend="jax")``.
+    compute dtype; ``pad_cache`` an optional ``kernels.ops.PadCache``
+    reusing device-resident padded operands across calls.  Prefer driving
+    this through ``CleaveRuntime.execute_step(backend="jax")``.
     """
     from repro.kernels import ops
 
@@ -133,66 +150,79 @@ def execute_plan_jax(gemm: cm.GEMM, plan: cm.Plan, A: np.ndarray,
     rng = as_rng(rng)
     m, q = gemm.m, gemm.q
     assert A.shape == (m, gemm.n) and B.shape == (gemm.n, q)
-    fail = set(fail_ids)
     corrupt = set(corrupt_ids)
 
-    # ---- task list: surviving rectangles, then recovery patches ----------
-    # (device_id, r0, r1, c0, c1, is_recovery) in the numpy executor's order
-    tasks: List[Tuple[int, int, int, int, int, bool]] = []
-    for a in plan.assignments:
-        if a.device_id in fail:
-            continue
-        tasks.append((a.device_id, a.r0, a.r1, a.c0, a.c1, False))
+    tasks, recovery = build_task_list(gemm, plan, devices, fail_ids)
+    n_rec = sum(1 for t in tasks if t.is_recovery)
 
-    recovery: Optional[churn.RecoveryResult] = None
-    if fail:
-        event = churn.FailureEvent(gemm=gemm, failed_ids=sorted(fail),
-                                   plan=plan)
-        recovery = churn.recover(event, devices)
-        for rect, patch in recovery.patches:
-            for pa in patch.assignments:
-                tasks.append((pa.device_id, rect.r0 + pa.r0,
-                              rect.r0 + pa.r1, rect.c0 + pa.c0,
-                              rect.c0 + pa.c1, True))
-
-    # ---- one batched pass per padded-shape bucket ------------------------
+    # ---- one batched (compute + verify) pass per padded-shape bucket -----
     t0 = time.perf_counter()
-    rects = [(r0, r1, c0, c1) for _, r0, r1, c0, c1, _ in tasks]
-    blocks = ops.plan_gemm(A, B, rects, block=block, kernel=kernel,
-                           compute_dtype=pol.compute_dtype)
+    rects = [(t.r0, t.r1, t.c0, t.c1) for t in tasks]
+    corrupt_mask = np.fromiter((t.device_id in corrupt for t in tasks),
+                               np.float32, count=len(tasks))
+    seed = int(rng.integers(0, 2 ** 31 - 1)) if verify else None
+    runs = ops.plan_gemm_buckets(A, B, rects, block=block, kernel=kernel,
+                                 compute_dtype=pol.compute_dtype,
+                                 verify_seed=seed, corrupt=corrupt_mask,
+                                 pad_cache=pad_cache)
 
     C = np.zeros((m, q), np.float32)
     filled = np.zeros((m, q), bool)
     verified = True
-    n_tasks = 0
-    n_rec = 0
     flops = 0.0
-    for (dev_id, r0, r1, c0, c1, is_rec), blk in zip(tasks, blocks):
-        if dev_id in corrupt and blk.size:
-            blk = blk.copy()
-            blk[0, 0] += 1.0 + abs(blk[0, 0])
-        ok = True
-        if verify:
-            rtol = pol.freivalds_rtol(gemm.n, (r1 - r0) * (c1 - c0))
-            ok = freivalds(A[r0:r1], B[:, c0:c1], blk, rng, rtol=rtol)
-        if not ok:
+    for run in runs:
+        hs = run.band_hs.astype(np.int64)[run.bidx]
+        ws = (run.c1s - run.c0s).astype(np.int64)
+        flops += 2.0 * gemm.n * float((hs * ws).sum())
+        # vectorized scatter: each band bulk-writes the contiguous runs of
+        # its rects' column-window union (a grid partition's bands tile the
+        # width, so this is one slice write per band) instead of the old
+        # per-task Python loop
+        Gb = len(run.band_r0s)
+        cover = np.zeros((Gb, q + 1), np.int32)
+        np.add.at(cover, (run.bidx, run.c0s), 1)
+        np.add.at(cover, (run.bidx, run.c1s), -1)
+        cover = np.cumsum(cover[:, :q], axis=1) > 0
+        for b in range(Gb):
+            r0, h = int(run.band_r0s[b]), int(run.band_hs[b])
+            edges = np.flatnonzero(np.diff(cover[b].astype(np.int8)))
+            bounds = np.concatenate(
+                ([0] if cover[b, 0] else [], edges + 1,
+                 [q] if cover[b, -1] else [])).astype(np.int64)
+            for s0, s1 in bounds.reshape(-1, 2):
+                C[r0:r0 + h, s0:s1] = run.out[b, :h, s0:s1]
+                filled[r0:r0 + h, s0:s1] = True
+        if not verify:
+            # poisoning still lands in the output (nobody checks it);
+            # injected post-scatter into the writable C, same
+            # blk[0,0] += 1 + |blk[0,0]| form as the numpy executor
+            for g in np.nonzero(corrupt_mask[run.idx])[0]:
+                r0, c0 = rects[run.idx[g]][0], rects[run.idx[g]][2]
+                C[r0, c0] += 1.0 + abs(C[r0, c0])
+            continue
+        rtols = pol.freivalds_c * pol.eps * np.sqrt(
+            max(gemm.n, 1) / np.maximum(hs * ws, 1))
+        ok = np.all(
+            np.abs(run.lhs - run.rhs)
+            <= rtols[:, None] * np.abs(run.rhs)
+            + (rtols * (run.scale + 1e-30))[:, None], axis=1)
+        for g in np.nonzero(~ok)[0]:
+            # device-side residual flagged this block: confirm with the
+            # host oracle, then model the PS re-dispatch to a clean device
+            # (same dtype policy) for genuine corruption
+            i = run.idx[g]
+            r0, r1, c0, c1 = rects[i]
+            if freivalds(A[r0:r1], B[:, c0:c1], run.block(g), rng,
+                         rtol=float(rtols[g])):
+                continue
             verified = False
-            # PS re-dispatches the tile to a clean device: same dtype
-            # policy (compute-dtype operands, f32 accumulation), computed
-            # directly on the already-sliced operands
-            blk = _redispatch(A[r0:r1], B[:, c0:c1], pol)
-        assert not filled[r0:r1, c0:c1].any(), "overlapping assignment"
-        C[r0:r1, c0:c1] = blk
-        filled[r0:r1, c0:c1] = True
-        n_tasks += 1
-        flops += 2.0 * (r1 - r0) * gemm.n * (c1 - c0)
-        if is_rec:
-            n_rec += 1
+            C[r0:r1, c0:c1] = _redispatch(A[r0:r1], B[:, c0:c1], pol)
     exec_time = time.perf_counter() - t0
 
     assert filled.all(), "coverage violated"
+    assert sum(t.area for t in tasks) == m * q, "overlapping assignment"
     return JaxExecutionReport(
-        output=C, verified=verified, n_tasks=n_tasks, n_recovered=n_rec,
+        output=C, verified=verified, n_tasks=len(tasks), n_recovered=n_rec,
         recovery=recovery, backend="jax", kernel=kernel, policy=pol.name,
         exec_time=exec_time, gflops=flops / max(exec_time, 1e-12) / 1e9,
-        tasks_per_s=n_tasks / max(exec_time, 1e-12))
+        tasks_per_s=len(tasks) / max(exec_time, 1e-12))

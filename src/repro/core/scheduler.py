@@ -7,6 +7,11 @@ cold-start amortization, Table 7).  Outputs:
 * a :class:`SchedulePlan` with per-GEMM device assignments,
 * the composed batch latency C_BATCH = C_GEMM(S-1) + C_OPTTAIL (Eq. 1 + §4.1),
 * per-device communication and memory accounting (Figs. 1 and 5).
+
+Every entry point accepts a :class:`~repro.core.cost_model.DeviceTable`
+(the fleet-array fast path — ``CleaveRuntime`` passes its cached table), a
+``Fleet``, or a plain device sequence; per-device accounting accumulates
+into id-indexed arrays instead of dict-of-float loops.
 """
 from __future__ import annotations
 
@@ -52,29 +57,35 @@ def plan_shape_key(g: cm.GEMM) -> tuple:
     return (g.m, g.n, g.q, g.b)
 
 
-def solve_level_gemm(g: cm.GEMM, devices: Sequence[cm.Device]) -> cm.Plan:
+def solve_level_gemm(g: cm.GEMM, devices: cm.Fleetlike) -> cm.Plan:
     """Solve one level-GEMM the way the batch scheduler would: count-many
     independent instances are scheduled whole across the pool (streamed)
     unless decomposing each instance into sub-GEMM waves is faster.  The
     single entry point for anything that inserts into a shared plan cache,
     so cached plans are identical regardless of which caller solved them."""
+    table = cm.DeviceTable.ensure(devices)
     if g.count > 1:
-        batched = cm.solve_batched(g, devices)
-        sub = cm.solve_gemm(g, devices)
-        waves = _wave_factor(g, sub, len(devices))
+        batched = cm.solve_batched(g, table)
+        sub = cm.solve_gemm(g, table)
+        waves = _wave_factor(g, sub, len(table))
         if batched.makespan <= sub.makespan * waves:
             return batched
         sub.makespan *= waves
         return sub
-    return cm.solve_gemm(g, devices)
+    return cm.solve_gemm(g, table)
 
 
-def schedule(dag: GemmDag, devices: Sequence[cm.Device],
+def schedule(dag: GemmDag, devices: cm.Fleetlike,
              ps: Optional[cm.PSConfig] = None,
              heterogeneity_aware: bool = True,
              plan_cache: Optional[MutableMapping] = None) -> SchedulePlan:
     """Solve the batch schedule.  With `heterogeneity_aware=False` every
     device gets an equal share regardless of capability (Table 9 ablation).
+
+    ``devices`` may be a :class:`~repro.core.cost_model.DeviceTable` or any
+    device sequence; the table is the fast path (the ``CleaveRuntime``
+    passes its fleet-signature-cached table, so the struct-of-arrays view
+    is built once per fleet, not once per schedule).
 
     `plan_cache`: optional shape-keyed mapping owned by the caller (the
     `CleaveRuntime` keys it by fleet signature).  Shapes already present are
@@ -82,24 +93,22 @@ def schedule(dag: GemmDag, devices: Sequence[cm.Device],
     steps (Table 7).  The cache must only ever see one device fleet (and one
     `heterogeneity_aware` setting)."""
     ps = ps or cm.PSConfig()
-    real_devices = list(devices)
-    if not heterogeneity_aware:
-        # plan as if homogeneous (equal shards), but *evaluate* on the real
-        # fleet: the slowest participant bounds each level (Table 9)
-        devices = _homogenize(devices)
+    table = cm.DeviceTable.ensure(devices)
+    # plan as if homogeneous (equal shards), but *evaluate* on the real
+    # fleet: the slowest participant bounds each level (Table 9)
+    solve_table = table if heterogeneity_aware else table.homogenized()
 
     plans: MutableMapping = plan_cache if plan_cache is not None else {}
     for g in dag.gemms:
         k = plan_shape_key(g) + (g.count,)
         if k in plans:
             continue
-        plans[k] = solve_level_gemm(g, devices)
+        plans[k] = solve_level_gemm(g, solve_table)
 
     dag_keys = {plan_shape_key(g) + (g.count,) for g in dag.gemms}
     if not heterogeneity_aware:
         for k in dag_keys:
-            reprice_plan(plans[k], real_devices)
-        devices = real_devices
+            reprice_plan(plans[k], table)
 
     level_times = []
     for level in dag.levels():
@@ -114,7 +123,7 @@ def schedule(dag: GemmDag, devices: Sequence[cm.Device],
     opt_tail = cm.optimizer_tail(dag.gemms, ps)
     batch_time = gemm_time + opt_tail
 
-    dl, ul, mem = _accounting(dag, plans)
+    dl, ul, mem = _accounting(dag, plans, table)
     comm = {k: dl.get(k, 0.0) + ul.get(k, 0.0) for k in dl}
     # restrict to this DAG's shapes: a shared plan_cache may hold more
     dag_plans = {k: plans[k] for k in dag_keys}
@@ -122,30 +131,33 @@ def schedule(dag: GemmDag, devices: Sequence[cm.Device],
                                   for p in dag_plans.values()]) \
         if dag_plans else set()
     return SchedulePlan(
-        dag=dag, devices=list(devices), plans_by_shape=dag_plans,
+        dag=dag, devices=list(table.devices), plans_by_shape=dag_plans,
         batch_time=batch_time, gemm_time=gemm_time, opt_tail=opt_tail,
         level_times=level_times, per_device_comm=comm, per_device_dl=dl,
         per_device_ul=ul, per_device_mem=mem, excluded=excluded)
 
 
-def reprice_plan(p: cm.Plan, real_devices: Sequence[cm.Device]) -> None:
+def reprice_plan(p: cm.Plan, real_devices: cm.Fleetlike) -> None:
     """Re-price a plan solved on an idealized (homogenized) fleet against
     the real heterogeneous one: the slowest real participant bounds each
     level (Table 9 ablation).  Idempotent — the makespan is recomputed from
     scratch, with the n_split rounds and count>1 wave multiplier the
     het-aware solve applies."""
+    table = cm.DeviceTable.ensure(real_devices)
     if p.instances is not None:
-        by_id = {d.device_id: d for d in real_devices}
-        t = 0.0
-        for did, wi in p.instances.items():
-            d = by_id[did]
-            t = max(t, max(d.dl_lat, d.ul_lat)
-                    + wi * cm.instance_time(p.gemm, d))
-        p.makespan = t
+        if p.instances:
+            idx = table.rows_of(p.instances.keys())
+            wi = np.fromiter(p.instances.values(), np.float64,
+                             count=len(p.instances))
+            t = table.lat[idx] + wi * cm._instance_time_vec(p.gemm,
+                                                            table)[idx]
+            p.makespan = float(np.max(t))
+        else:
+            p.makespan = 0.0
     else:
-        p.makespan = cm.plan_makespan(p.gemm, real_devices, p) * p.n_split
+        p.makespan = cm.plan_makespan(p.gemm, table, p) * p.n_split
         if p.gemm.count > 1:
-            p.makespan *= _wave_factor(p.gemm, p, len(real_devices))
+            p.makespan *= _wave_factor(p.gemm, p, len(table))
 
 
 def _wave_factor(g: cm.GEMM, plan: cm.Plan, n_devices: int) -> float:
@@ -171,23 +183,64 @@ def _homogenize(devices):
             for d in devices]
 
 
-def _accounting(dag: GemmDag, plans):
-    dl: Dict[int, float] = {}
-    ul: Dict[int, float] = {}
-    mem: Dict[int, float] = {}
+def _plan_accounting_arrays(p: cm.Plan, table: cm.DeviceTable):
+    """Id-indexed gather arrays for one plan, computed once per unique plan
+    and reused for every DAG occurrence of its shape."""
+    if p.instances is not None:
+        idx = table.rows_of(p.instances.keys()) if p.instances \
+            else np.zeros(0, np.int64)
+        wi = np.fromiter(p.instances.values(), np.float64,
+                         count=len(p.instances))
+        return ("inst", idx, wi, None)
+    n_a = len(p.assignments)
+    idx = table.rows_of(a.device_id for a in p.assignments) if n_a \
+        else np.zeros(0, np.int64)
+    al = np.fromiter((a.alpha for a in p.assignments), np.float64,
+                     count=n_a)
+    be = np.fromiter((a.beta for a in p.assignments), np.float64,
+                     count=n_a)
+    return ("rect", idx, al, be)
+
+
+def _accounting(dag: GemmDag, plans, table: cm.DeviceTable):
+    """Per-device DL/UL/memory totals as ONE ``np.add.at`` /
+    ``np.maximum.at`` pass per *unique shape* over id-indexed arrays (the
+    dict-of-float accumulation this replaces looped Python-side over every
+    assignment of every DAG gemm).  Repeated occurrences of a shape across
+    layers/levels collapse into an occurrence multiplier.  Returns dicts
+    keyed by device id, restricted to devices that appear in some plan —
+    the shape the accounting strategies expect."""
+    D = len(table)
+    dl = np.zeros(D)
+    ul = np.zeros(D)
+    mem = np.zeros(D)
+    touched = np.zeros(D, bool)
+    occurrences: Dict[tuple, list] = {}
     for g in dag.gemms:
-        p = plans[plan_shape_key(g) + (g.count,)]
-        if p.instances is not None:
-            for did, wi in p.instances.items():
-                dl[did] = dl.get(did, 0.0) + wi * g.in_bytes
-                ul[did] = ul.get(did, 0.0) + wi * g.out_bytes
-                mem[did] = max(mem.get(did, 0.0), g.in_bytes + g.out_bytes)
+        k = plan_shape_key(g) + (g.count,)
+        entry = occurrences.get(k)
+        if entry is None:
+            occurrences[k] = [g, 1]
+        else:
+            entry[1] += 1
+    for k, (g, reps) in occurrences.items():
+        p = plans[k]
+        kind, idx, x, y = _plan_accounting_arrays(p, table)
+        if idx.size == 0:
             continue
-        for a in p.assignments:
-            d_in = (a.alpha * g.n + g.n * a.beta) * g.b * g.count
-            d_out = a.alpha * a.beta * g.b * g.count
-            dl[a.device_id] = dl.get(a.device_id, 0.0) + d_in
-            ul[a.device_id] = ul.get(a.device_id, 0.0) + d_out
-            need = ((a.alpha + a.beta) * g.n + a.alpha * a.beta) * g.b
-            mem[a.device_id] = max(mem.get(a.device_id, 0.0), need)
-    return dl, ul, mem
+        if kind == "inst":
+            # one entry per device: plain fancy indexing accumulates safely
+            dl[idx] += reps * x * g.in_bytes
+            ul[idx] += reps * x * g.out_bytes
+            np.maximum.at(mem, idx, g.in_bytes + g.out_bytes)
+        else:
+            al, be = x, y
+            np.add.at(dl, idx, reps * (al * g.n + g.n * be) * g.b * g.count)
+            np.add.at(ul, idx, reps * al * be * g.b * g.count)
+            np.maximum.at(mem, idx, ((al + be) * g.n + al * be) * g.b)
+        touched[idx] = True
+    ids = table.ids
+    sel = np.nonzero(touched)[0]
+    return ({int(ids[i]): float(dl[i]) for i in sel},
+            {int(ids[i]): float(ul[i]) for i in sel},
+            {int(ids[i]): float(mem[i]) for i in sel})

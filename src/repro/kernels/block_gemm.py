@@ -43,6 +43,52 @@ def _batched_matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps):
         o_ref[0] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _batched_shared_b_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[0], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(3) == k_steps - 1)
+    def _store():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def block_gemm_batched_shared(a: jax.Array, b: jax.Array, *, bm: int = 128,
+                              bn: int = 128, bk: int = 128, out_dtype=None,
+                              interpret: bool = False):
+    """C[g] = A[g] @ B for a stack of G same-shape row bands against ONE
+    shared right operand — the fleet executor's band-bucket primitive: a
+    CLEAVE grid partition's row bands all multiply the same B, so the
+    B-side BlockSpec indexes only the (j, l) grid axes and every batch cell
+    streams the same HBM tiles instead of gathering a per-band copy.
+
+    a: (G, m, k); b: (k, n); shapes must tile evenly (``ops.plan_gemm``
+    pads otherwise)."""
+    G, m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        (m, n, k, bm, bn, bk)
+    grid = (G, m // bm, n // bn, k // bk)
+    out_dtype = out_dtype or a.dtype
+    return pl.pallas_call(
+        functools.partial(_batched_shared_b_kernel, k_steps=grid[3]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda g, i, j, l: (g, i, l)),
+            pl.BlockSpec((bk, bn), lambda g, i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda g, i, j, l: (g, i, j)),
+        out_shape=jax.ShapeDtypeStruct((G, m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+
+
 def block_gemm_batched(a: jax.Array, b: jax.Array, *, bm: int = 128,
                        bn: int = 128, bk: int = 128, out_dtype=None,
                        interpret: bool = False):

@@ -4,7 +4,9 @@ Python for correctness validation; compiled on TPU).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +47,66 @@ def block_gemm(a, b, *, bm=128, bn=128, bk=128):
 
 # ------------------------------------------------------- plan execution ----
 
+class PadCache:
+    """Small keyed cache of device-resident zero-padded operands.
+
+    ``plan_gemm``'s padded ``a_pad``/``b_pad`` staging used to rebuild two
+    full host copies (``np.zeros`` + fill + ``jnp.asarray``) on every call;
+    a runtime step loop calls ``plan_gemm`` once per level GEMM with the
+    same operands, so the padded device arrays are cached keyed by
+    ``(role, source shape, padded shape)`` plus a full-buffer content
+    fingerprint (adler32 over the raw bytes, ~40% of the staging cost).
+    Content keying makes the cache safe under the common training pattern
+    of *in-place* operand updates between steps — a mutated array simply
+    fingerprints as a miss instead of serving a stale device copy.
+    Non-contiguous sources skip the cache (fingerprinting them would cost
+    a copy anyway).
+    """
+
+    def __init__(self, capacity: int = 8):
+        self.capacity = capacity
+        self._slots: list = []      # (key, value), MRU first
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def fingerprint(src) -> "int | None":
+        import zlib
+        if not src.flags.c_contiguous:
+            return None
+        return zlib.adler32(memoryview(src).cast("B"))
+
+    def get(self, src, key, build):
+        fp = self.fingerprint(src)
+        if fp is None:
+            return build()          # non-contiguous source: skip caching
+        key = key + (fp,)
+        for i, (k, val) in enumerate(self._slots):
+            if k == key:
+                if i:
+                    self._slots.insert(0, self._slots.pop(i))
+                self.hits += 1
+                return val
+        val = build()
+        self.misses += 1
+        self._slots.insert(0, (key, val))
+        del self._slots[self.capacity:]
+        return val
+
+
+def _staged_pad(arr: np.ndarray, rows: int, cols: int, role: str,
+                cache: "PadCache | None"):
+    """Zero-pad ``arr`` to (rows, cols) and stage it on device, through the
+    cache when one is provided."""
+    def build():
+        padded = np.zeros((rows, cols), np.float32)
+        padded[:arr.shape[0], :arr.shape[1]] = arr
+        return jnp.asarray(padded)
+    if cache is None:
+        return build()
+    return cache.get(arr, (role, arr.shape, rows, cols), build)
+
+
 def resolve_plan_kernel(kernel: str = "auto") -> str:
     """``"pallas"`` on TPU (the compiled block_gemm grid), ``"xla"`` on
     hosts without one (batched dot through XLA — the meaningful compiled
@@ -58,51 +120,160 @@ def resolve_plan_kernel(kernel: str = "auto") -> str:
     return kernel
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("pm", "pq", "bm", "bn", "bk", "kernel",
-                                    "compute_dtype"))
-def _bucket_gemm(a_pad, b_pad, r0s, c0s, *, pm, pq, bm, bn, bk, kernel,
-                 compute_dtype):
-    """One padded-shape bucket: gather every rectangle's A row-band /
-    B column-slab on-device (vmapped dynamic_slice — no host staging
-    copies), cast to the policy compute dtype, and run the whole bucket as
-    one batched kernel launch with f32 accumulation."""
+def _gather_bands(a_pad, r0s, pm, compute_dtype):
     nk = a_pad.shape[1]
 
     def ga(r0):
         return jax.lax.dynamic_slice(a_pad, (r0, 0), (pm, nk))
 
-    def gb(c0):
-        return jax.lax.dynamic_slice(b_pad, (0, c0), (nk, pq))
+    return jax.vmap(ga)(r0s).astype(compute_dtype)
 
-    As = jax.vmap(ga)(r0s).astype(compute_dtype)
-    Bs = jax.vmap(gb)(c0s).astype(compute_dtype)
+
+def _band_matmul(As, b_op, bm, bn, bk, kernel):
     if kernel == "xla":
-        return jnp.einsum("gmk,gkn->gmn", As, Bs,
+        return jnp.einsum("gmk,kq->gmq", As, b_op,
                           preferred_element_type=jnp.float32)
-    return _bg.block_gemm_batched(As, Bs, bm=bm, bn=bn, bk=bk,
-                                  out_dtype=jnp.float32,
-                                  interpret=_interpret())
+    return _bg.block_gemm_batched_shared(As, b_op, bm=bm, bn=bn, bk=bk,
+                                         out_dtype=jnp.float32,
+                                         interpret=_interpret())
 
 
-def plan_gemm(a, b, rects, *, block=128, kernel="auto",
-              compute_dtype=None):
-    """Execute output rectangles of C = A @ B as batched sub-GEMMs.
+@functools.partial(jax.jit,
+                   static_argnames=("pm", "bm", "bn", "bk", "kernel",
+                                    "compute_dtype"))
+def _bucket_gemm(a_pad, b_pad, r0s, *, pm, bm, bn, bk, kernel,
+                 compute_dtype):
+    """One band bucket: gather every row band's A rows on-device (vmapped
+    dynamic_slice), cast to the policy compute dtype, and run the whole
+    bucket as ONE batched kernel launch against the *shared* padded B with
+    f32 accumulation.  A CLEAVE grid partition's rectangles tile each band
+    across the full output width, so banding needs no B-side gather at all
+    — per-rectangle blocks are column windows of the band products."""
+    As = _gather_bands(a_pad, r0s, pm, compute_dtype)
+    return _band_matmul(As, b_pad.astype(compute_dtype), bm, bn, bk, kernel)
 
-    ``rects`` is a sequence of ``(r0, r1, c0, c1)`` output rectangles (a
-    CLEAVE plan's assignment grid).  Rectangles are bucketed by their
-    MXU-aligned padded shape (multiples of ``block``); each bucket gathers
-    its A row-bands and B column-slabs on-device and runs as ONE batched
-    kernel launch (``kernels.block_gemm.block_gemm_batched`` for
-    ``kernel="pallas"``, a batched XLA dot for ``"xla"``; see
-    :func:`resolve_plan_kernel`).  A and B are zero-padded once past their
-    edges, so an over-wide gather reads either real neighbour rows/columns
-    or zeros — both cropped away — and the kept region is exactly the
-    rectangle's product.
 
-    ``compute_dtype`` defaults to bfloat16 on TPU (MXU-native) and float32
-    elsewhere; accumulation is float32 in both kernels.  Returns float32
-    numpy blocks in ``rects`` order."""
+@functools.partial(jax.jit,
+                   static_argnames=("pm", "R", "bm", "bn", "bk", "kernel",
+                                    "compute_dtype", "iters"))
+def _bucket_gemm_verified(a_pad, b_pad, r0s, hs, bidx, slot, c0s, c1s,
+                          corrupt, key, task_ids, *, pm, R, bm, bn, bk,
+                          kernel, compute_dtype, iters):
+    """:func:`_bucket_gemm` plus device-side batched Freivalds residuals in
+    the same launch (§6 on the accelerator substrate).
+
+    Per rectangle: sign vectors ``r`` (iters × band rows) and ``s``
+    (iters × output cols) are drawn on device from the threaded ``key``
+    folded with the rectangle's global task id (so draws are independent of
+    bucketing), masked to the rectangle's rows/columns, and the check
+    reduces to three extra batched matvec chains — ``t = B s``,
+    ``lhs = r·(A t)`` vs ``rhs = (r·C)·s`` — plus the ``|r|·|C|·|s|`` noise
+    scale (= Σ|C| over the rectangle).  Rectangles are grouped
+    ``(band, slot)`` so the band-shared ``A`` and ``C`` contractions batch
+    across the bucket.  ``corrupt`` models a poisoning device: flagged
+    rectangles get the same ``C[0,0] += 1 + |C[0,0]|`` injection the numpy
+    executor applies, so the residual sees exactly the block the PS would
+    receive.  Returns ``(C_bands, lhs, rhs, scale)``; the executor compares
+    against the dtype policy's per-block tolerance on the host (per-rect
+    scalars, not blocks)."""
+    As = _gather_bands(a_pad, r0s, pm, compute_dtype)
+    b_op = b_pad.astype(compute_dtype)
+    C = _band_matmul(As, b_op, bm, bn, bk, kernel)
+    qk = C.shape[2]
+    Gb = r0s.shape[0]
+    # device-side poisoning: each corrupt rect's block origin is (band
+    # row 0, its first column) in the band product
+    c00 = C[bidx, 0, c0s]
+    C = C.at[bidx, 0, c0s].add(corrupt * (1.0 + jnp.abs(c00)))
+
+    def draw(ti):
+        k = jax.random.fold_in(key, ti)
+        kr, ks = jax.random.split(k)
+        return (jax.random.rademacher(kr, (iters, pm), jnp.float32),
+                jax.random.rademacher(ks, (iters, qk), jnp.float32))
+
+    r, s = jax.vmap(draw)(task_ids)          # (Gr, iters, pm/qk)
+    rowm = (jnp.arange(pm)[None, :] < hs[:, None]).astype(jnp.float32)
+    cols = jnp.arange(qk)[None, :]
+    colm = ((cols >= c0s[:, None]) & (cols < c1s[:, None])) \
+        .astype(jnp.float32)                 # (Gr, qk)
+    r = r * rowm[bidx][:, None, :]
+    s = s * colm[:, None, :]
+    Af = As.astype(jnp.float32)
+    Bf = b_op.astype(jnp.float32)
+    # lhs = r · (A_band (B s)): B s per rect, then one grouped contraction
+    # against each band's shared A rows
+    t = jnp.einsum("kq,riq->rki", Bf, s, preferred_element_type=jnp.float32)
+    t_g = jnp.zeros((Gb, R) + t.shape[1:], jnp.float32) \
+        .at[bidx, slot].set(t)
+    u = jnp.einsum("bmk,brki->bmri", Af, t_g,
+                   preferred_element_type=jnp.float32)
+    r_g = jnp.zeros((Gb, R, iters, pm), jnp.float32).at[bidx, slot].set(r)
+    lhs = jnp.einsum("brim,bmri->bri", r_g, u,
+                     preferred_element_type=jnp.float32)[bidx, slot]
+    # rhs = (r · C) · s, contracted s-first so the intermediate stays tiny
+    s_g = jnp.zeros((Gb, R, iters, qk), jnp.float32).at[bidx, slot].set(s)
+    Cs = jnp.einsum("bmq,briq->bmri", C, s_g,
+                    preferred_element_type=jnp.float32)
+    rhs = jnp.einsum("brim,bmri->bri", r_g, Cs,
+                     preferred_element_type=jnp.float32)[bidx, slot]
+    colm_g = jnp.zeros((Gb, R, qk), jnp.float32).at[bidx, slot].set(colm)
+    Csa = jnp.einsum("bmq,brq->bmr", jnp.abs(C), colm_g,
+                     preferred_element_type=jnp.float32)
+    scale = jnp.einsum("bm,bmr->br", rowm, Csa,
+                       preferred_element_type=jnp.float32)[bidx, slot]
+    return C, lhs, rhs, scale
+
+
+@dataclasses.dataclass
+class BucketRun:
+    """One band bucket's batched launch result.
+
+    Bands (distinct ``(r0, r1)`` row ranges, padded to a common height
+    ``pm``) carry the computed products; rectangles map onto them via
+    ``bidx`` and their column windows."""
+    idx: np.ndarray          # rect indices into the caller's rects
+    pm: int                  # padded band height
+    q: int                   # un-padded output width (out is (Gb, pm, qk))
+    band_r0s: np.ndarray     # (Gb,) band origins
+    band_hs: np.ndarray      # (Gb,) un-padded band heights
+    bidx: np.ndarray         # (Gr,) band of each rect
+    c0s: np.ndarray          # (Gr,) rect column windows
+    c1s: np.ndarray
+    out: np.ndarray          # (Gb, pm, qk) float32 band products
+    lhs: Optional[np.ndarray] = None     # (Gr, iters) Freivalds residuals
+    rhs: Optional[np.ndarray] = None
+    scale: Optional[np.ndarray] = None   # (Gr,) Σ|C| noise scale
+
+    def block(self, g: int) -> np.ndarray:
+        """Rect ``g``'s un-padded block view into its band product."""
+        b = self.bidx[g]
+        return self.out[b, :self.band_hs[b], self.c0s[g]:self.c1s[g]]
+
+
+def plan_gemm_buckets(a, b, rects, *, block=128, kernel="auto",
+                      compute_dtype=None, verify_seed=None,
+                      freivalds_iters: int = 2, corrupt=None,
+                      pad_cache: Optional[PadCache] = None):
+    """Bucketed execution of output rectangles of C = A @ B — the fleet
+    executor's primitive.
+
+    Rectangles (``(r0, r1, c0, c1)``; degenerate ones are skipped) are
+    grouped into row *bands* (distinct row ranges — a CLEAVE grid
+    partition's native structure), bands are bucketed by MXU-aligned padded
+    height, and each bucket runs as ONE batched kernel launch of its
+    gathered A row bands against the shared padded B
+    (``kernels.block_gemm.block_gemm_batched_shared`` for
+    ``kernel="pallas"``, a batched XLA dot for ``"xla"``).  Nothing on the
+    B side is gathered or replicated, and the band products cover every
+    rectangle in the band as column windows.
+
+    With ``verify_seed`` set, the launch also emits per-rect Freivalds
+    residuals (see :func:`_bucket_gemm_verified`); ``corrupt`` is an
+    optional per-rect flag vector of simulated poisoning devices.
+    ``pad_cache`` reuses device-resident padded operands across calls (see
+    :class:`PadCache`).  Returns a list of :class:`BucketRun`.
+    """
     kernel = resolve_plan_kernel(kernel)
     if compute_dtype is None:
         compute_dtype = ("bfloat16" if jax.default_backend() == "tpu"
@@ -112,37 +283,91 @@ def plan_gemm(a, b, rects, *, block=128, kernel="auto",
     m, n = a.shape
     q = b.shape[1]
     nk = max(-(-n // block) * block, block)
-    blocks: list = [None] * len(rects)
-    buckets: dict = {}
+    qk = max(-(-q // block) * block, block)
+    bands: dict = {}                     # (r0, r1) -> [rect index, ...]
     for i, (r0, r1, c0, c1) in enumerate(rects):
-        al, be = r1 - r0, c1 - c0
-        if al <= 0 or be <= 0:
-            blocks[i] = np.zeros((max(al, 0), max(be, 0)), np.float32)
+        if r1 - r0 <= 0 or c1 - c0 <= 0:
             continue
-        pm = -(-al // block) * block
-        pq = -(-be // block) * block
-        buckets.setdefault((pm, pq), []).append(i)
-    if not buckets:
-        return blocks
-    # pad once: rows/cols past the edge make every in-bucket gather legal
-    pmax = max(pm for pm, _ in buckets)
-    qmax = max(pq for _, pq in buckets)
-    a_pad = np.zeros((m + pmax, nk), np.float32)
-    a_pad[:m, :n] = a
-    b_pad = np.zeros((nk, q + qmax), np.float32)
-    b_pad[:n, :q] = b
-    a_pad = jnp.asarray(a_pad)
-    b_pad = jnp.asarray(b_pad)
-    for (pm, pq), idxs in buckets.items():
-        r0s = jnp.asarray([rects[i][0] for i in idxs], jnp.int32)
-        c0s = jnp.asarray([rects[i][2] for i in idxs], jnp.int32)
-        out = np.asarray(_bucket_gemm(
-            a_pad, b_pad, r0s, c0s, pm=pm, pq=pq,
-            bm=min(block, pm), bn=min(block, pq), bk=min(block, nk),
-            kernel=kernel, compute_dtype=compute_dtype))
-        for g, i in enumerate(idxs):
-            r0, r1, c0, c1 = rects[i]
-            blocks[i] = out[g, :r1 - r0, :c1 - c0]
+        bands.setdefault((r0, r1), []).append(i)
+    runs: list = []
+    if not bands:
+        return runs
+    buckets: dict = {}                   # pm -> [(r0, r1), ...]
+    for (r0, r1) in bands:
+        pm = -(-(r1 - r0) // block) * block
+        buckets.setdefault(pm, []).append((r0, r1))
+    # pad once: rows past the edge make every band gather legal
+    pmax = max(buckets)
+    a_pad = _staged_pad(a, m + pmax, nk, "a", pad_cache)
+    b_pad = _staged_pad(b, nk, qk, "b", pad_cache)
+    key = jax.random.PRNGKey(verify_seed) if verify_seed is not None else None
+    for pm, bucket_bands in buckets.items():
+        r0s = np.asarray([r0 for r0, _ in bucket_bands], np.int32)
+        hs = np.asarray([r1 - r0 for r0, r1 in bucket_bands], np.int32)
+        ia, bidx, slot = [], [], []
+        for bi, bk_ in enumerate(bucket_bands):
+            for si, i in enumerate(bands[bk_]):
+                ia.append(i)
+                bidx.append(bi)
+                slot.append(si)
+        ia = np.asarray(ia, np.int64)
+        bidx = np.asarray(bidx, np.int32)
+        slot = np.asarray(slot, np.int32)
+        c0s = np.asarray([rects[i][2] for i in ia], np.int32)
+        c1s = np.asarray([rects[i][3] for i in ia], np.int32)
+        bm, bn, bk = min(block, pm), min(block, qk), min(block, nk)
+        if key is None:
+            out = np.asarray(_bucket_gemm(
+                a_pad, b_pad, jnp.asarray(r0s), pm=pm, bm=bm, bn=bn, bk=bk,
+                kernel=kernel, compute_dtype=compute_dtype))
+            runs.append(BucketRun(idx=ia, pm=pm, q=q, band_r0s=r0s,
+                                  band_hs=hs, bidx=bidx, c0s=c0s, c1s=c1s,
+                                  out=out))
+        else:
+            corr = np.zeros(len(ia), np.float32) if corrupt is None \
+                else np.asarray(corrupt, np.float32)[ia]
+            R = int(max(np.bincount(bidx))) if len(bidx) else 1
+            C, lhs, rhs, scale = _bucket_gemm_verified(
+                a_pad, b_pad, jnp.asarray(r0s), jnp.asarray(hs),
+                jnp.asarray(bidx), jnp.asarray(slot), jnp.asarray(c0s),
+                jnp.asarray(c1s), jnp.asarray(corr), key,
+                jnp.asarray(ia, jnp.int32), pm=pm, R=R, bm=bm, bn=bn,
+                bk=bk, kernel=kernel, compute_dtype=compute_dtype,
+                iters=freivalds_iters)
+            runs.append(BucketRun(idx=ia, pm=pm, q=q, band_r0s=r0s,
+                                  band_hs=hs, bidx=bidx, c0s=c0s, c1s=c1s,
+                                  out=np.asarray(C), lhs=np.asarray(lhs),
+                                  rhs=np.asarray(rhs),
+                                  scale=np.asarray(scale)))
+    return runs
+
+
+def plan_gemm(a, b, rects, *, block=128, kernel="auto",
+              compute_dtype=None, pad_cache: Optional[PadCache] = None):
+    """Execute output rectangles of C = A @ B as batched sub-GEMMs.
+
+    ``rects`` is a sequence of ``(r0, r1, c0, c1)`` output rectangles (a
+    CLEAVE plan's assignment grid).  Rectangles sharing a row range form a
+    band; bands are bucketed by MXU-aligned padded height and each bucket
+    runs as ONE batched kernel launch against the shared padded B (see
+    :func:`plan_gemm_buckets` / :func:`resolve_plan_kernel`).  A is
+    zero-padded once past its row edge, so an over-tall band gather reads
+    either real neighbour rows or zeros — cropped away — and each kept
+    window is exactly the rectangle's product.
+
+    ``compute_dtype`` defaults to bfloat16 on TPU (MXU-native) and float32
+    elsewhere; accumulation is float32 in both kernels.  Returns float32
+    numpy blocks in ``rects`` order."""
+    blocks: list = [None] * len(rects)
+    for i, (r0, r1, c0, c1) in enumerate(rects):
+        if r1 - r0 <= 0 or c1 - c0 <= 0:
+            blocks[i] = np.zeros((max(r1 - r0, 0), max(c1 - c0, 0)),
+                                 np.float32)
+    for run in plan_gemm_buckets(a, b, rects, block=block, kernel=kernel,
+                                 compute_dtype=compute_dtype,
+                                 pad_cache=pad_cache):
+        for g, i in enumerate(run.idx):
+            blocks[i] = run.block(g)
     return blocks
 
 

@@ -741,8 +741,11 @@ def simulate_schedule(sp, devices: Optional[Sequence[cm.Device]] = None, *,
             return
         fleet = eng.alive_devices()
         # het=False sessions re-solve on the homogenized fleet, exactly like
-        # scheduler.schedule; chains are still priced on the real devices
-        solve_fleet = fleet if heterogeneity_aware else _homogenize(fleet)
+        # scheduler.schedule; chains are still priced on the real devices.
+        # One DeviceTable per join event feeds every shape re-solve (the
+        # vectorized planner's fast path).
+        solve_fleet = cm.DeviceTable.from_devices(
+            fleet if heterogeneity_aware else _homogenize(fleet))
         cache: Dict[tuple, cm.Plan] = {}
         specs: List[Tuple[int, int, List[WorkItem]]] = []
         cur = eng.current_level

@@ -1,0 +1,245 @@
+"""Scalar reference solver — the pre-vectorization CLEAVE cost-model code,
+kept verbatim as the oracle the fleet-array (``DeviceTable``) fast path is
+tested against.
+
+This is the per-device Python-loop implementation that used to live in
+``repro.core.cost_model`` (``_max_share`` + bisections).  It is O(devices)
+Python per ``feasible(T)`` call — far too slow for thousand-device fleets —
+but trivially auditable against Eq. (1)-(7).  The vectorized solver must
+reproduce its shares, assignments, excluded set, and makespan (the only
+tolerated divergence is the closed-form memory cap vs. this file's
+40-iteration bisection, ~1e-12 relative).
+"""
+import numpy as np
+
+from repro.core import cost_model as cm
+
+
+def device_cost_ref(gemm, dev, alpha, beta, rows_cached=0.0, cols_cached=0.0):
+    if alpha <= 0 or beta <= 0:
+        return 0.0, 0.0, 0.0, 0.0
+    a_dl = max(alpha - rows_cached, 0.0)
+    b_dl = max(beta - cols_cached, 0.0)
+    dl = (a_dl * gemm.n + gemm.n * b_dl) * gemm.b / dev.dl_bw + dev.dl_lat
+    ul = alpha * beta * gemm.b / dev.ul_bw + dev.ul_lat
+    comp = 2.0 * alpha * beta * gemm.n / dev.flops
+    return max(dl, ul, comp), dl, ul, comp
+
+
+def plan_makespan_ref(gemm, devices, plan):
+    t = 0.0
+    dev_by_id = {d.device_id: d for d in devices}
+    for a in plan.assignments:
+        c, *_ = device_cost_ref(gemm, dev_by_id[a.device_id], a.alpha, a.beta)
+        t = max(t, c)
+    return t
+
+
+def lower_bound_ref(gemm, devices):
+    W = gemm.flops
+    F = sum(d.flops for d in devices)
+    t_comp = W / F
+    t_dl = gemm.in_bytes / sum(d.dl_bw for d in devices)
+    t_ul = gemm.out_bytes / sum(d.ul_bw for d in devices)
+    return max(t_comp, t_dl, t_ul)
+
+
+def max_share_ref(gemm, dev, T, rows_cached=0.0, cols_cached=0.0):
+    """Largest output share s = αβ/(mq) device can finish within T (scalar
+    closed forms + 40-iteration memory-perimeter bisection)."""
+    m, n, q, b = gemm.m, gemm.n, gemm.q, gemm.b
+    lat = max(dev.dl_lat, dev.ul_lat)
+    if T <= lat:
+        return 0.0, 0.0, 0.0
+    P_dl = (T - dev.dl_lat) * dev.dl_bw / (n * b) + rows_cached + cols_cached
+    A_ul = (T - dev.ul_lat) * dev.ul_bw / b
+    A_comp = T * dev.flops / (2.0 * n)
+
+    def area_given_P(P):
+        half = P / 2.0
+        a = min(m, half)
+        bb = min(q, P - a)
+        if bb > q:
+            bb = q
+            a = min(m, P - q)
+        return max(a, 0.0) * max(bb, 0.0), a, bb
+
+    P_hi = min(P_dl, float(m + q))
+    if P_hi <= 0:
+        return 0.0, 0.0, 0.0
+    lo, hi = 0.0, P_hi
+    for _ in range(40):
+        mid = 0.5 * (lo + hi)
+        area, _, _ = area_given_P(mid)
+        if mid * n * b + area * b <= dev.memory:
+            lo = mid
+        else:
+            hi = mid
+    P = lo
+    area, a, bb = area_given_P(P)
+    area = min(area, A_ul, A_comp, float(m) * q)
+    if area <= 0:
+        return 0.0, 0.0, 0.0
+    r = np.sqrt(area)
+    a2 = min(m, max(r, area / q))
+    b2 = area / a2
+    if a2 + b2 > P + 1e-9:
+        b2 = max(P - a2, 0.0)
+        area = a2 * b2
+    return area / (float(m) * q), a2, b2
+
+
+def solve_gemm_ref(gemm, devices, caches=None, tol=1e-3):
+    caches = caches or {}
+    lb = lower_bound_ref(gemm, devices)
+    ub = min(device_cost_ref(gemm, d, gemm.m, gemm.q)[0] for d in devices)
+    ub = max(ub, lb * 2, 1e-6)
+
+    def feasible(T):
+        tot = 0.0
+        for d in devices:
+            rc, cc = caches.get(d.device_id, (0.0, 0.0))
+            s, _, _ = max_share_ref(gemm, d, T, rc, cc)
+            tot += s
+            if tot >= 1.0:
+                return True
+        return tot >= 1.0
+
+    if not feasible(ub * 64):
+        if gemm.n < 2:
+            raise RuntimeError("infeasible GEMM schedule (memory too small?)")
+        half = cm.GEMM(m=gemm.m, n=(gemm.n + 1) // 2, q=gemm.q, b=gemm.b,
+                       name=gemm.name, level=gemm.level, layer=gemm.layer,
+                       count=gemm.count)
+        sub = solve_gemm_ref(half, devices, caches=caches, tol=tol)
+        return cm.Plan(gemm=gemm, assignments=sub.assignments,
+                       makespan=2.0 * sub.makespan, lower_bound=lb,
+                       excluded=sub.excluded, n_split=2 * sub.n_split)
+
+    while not feasible(ub):
+        ub *= 2.0
+        if ub > 1e9:
+            raise RuntimeError("infeasible GEMM schedule (memory too small?)")
+    lo, hi = lb, ub
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        if feasible(mid):
+            hi = mid
+        else:
+            lo = mid
+        if hi - lo < tol * hi:
+            break
+    T = hi
+
+    shares = []
+    for d in devices:
+        rc, cc = caches.get(d.device_id, (0.0, 0.0))
+        s, a, b = max_share_ref(gemm, d, T, rc, cc)
+        shares.append((d, s, a, b))
+    total = sum(s for _, s, _, _ in shares)
+    shares = [(d, s / total, a, b) for d, s, a, b in shares if s > 1e-12]
+    excluded = [d.device_id for d in devices
+                if d.device_id not in {x[0].device_id for x in shares}]
+
+    assignments = _grid_partition_ref(gemm, shares)
+    plan = cm.Plan(gemm=gemm, assignments=assignments, makespan=0.0,
+                   lower_bound=lb, excluded=excluded)
+    plan.makespan = plan_makespan_ref(gemm, devices, plan)
+    return plan
+
+
+def _grid_partition_ref(gemm, shares):
+    m, q = gemm.m, gemm.q
+    D = len(shares)
+    n_bands = int(np.clip(round(np.sqrt(D * m / max(q, 1))), 1, min(D, m)))
+    order = sorted(range(D), key=lambda i: -shares[i][1])
+    bands = [[] for _ in range(n_bands)]
+    band_tot = np.zeros(n_bands)
+    for i in order:                      # greedy balance band totals
+        jmin = int(np.argmin(band_tot))
+        bands[jmin].append(i)
+        band_tot[jmin] += shares[i][1]
+    bands = [b for b in bands if b]
+    band_tot = np.array([sum(shares[i][1] for i in b) for b in bands])
+    heights = _largest_remainder_ref(band_tot / band_tot.sum() * m, m)
+    merged = []
+    for b, h in zip(bands, heights):
+        if h == 0:
+            merged.extend(b)
+    if merged:
+        keep = [(b, h) for b, h in zip(bands, heights) if h > 0]
+        keep[0][0].extend(merged)
+        bands, heights = [b for b, _ in keep], [h for _, h in keep]
+
+    assignments = []
+    r0 = 0
+    for b, h in zip(bands, heights):
+        w_share = np.array([shares[i][1] for i in b])
+        widths = _largest_remainder_ref(w_share / w_share.sum() * q, q)
+        c0 = 0
+        for i, w in zip(b, widths):
+            if w > 0 and h > 0:
+                assignments.append(cm.Assignment(
+                    device_id=shares[i][0].device_id,
+                    r0=r0, r1=r0 + h, c0=c0, c1=c0 + w))
+            c0 += w
+        r0 += h
+    return assignments
+
+
+def _largest_remainder_ref(real_parts, total):
+    fl = np.floor(real_parts).astype(int)
+    rem = int(total - fl.sum())
+    order = np.argsort(-(real_parts - fl))
+    for i in range(rem):
+        fl[order[i % len(fl)]] += 1
+    return fl.tolist()
+
+
+def instance_time_ref(gemm, dev):
+    return max(gemm.in_bytes / dev.dl_bw, gemm.out_bytes / dev.ul_bw,
+               gemm.flops / dev.flops)
+
+
+def solve_batched_ref(gemm, devices, tol=1e-3):
+    C = gemm.count
+    inst_dl = gemm.in_bytes
+    inst_ul = gemm.out_bytes
+
+    fits = [d for d in devices
+            if inst_dl + inst_ul <= d.memory]
+    if not fits:
+        p = solve_gemm_ref(gemm, devices, tol=tol)
+        p.makespan *= C
+        return p
+
+    def cap(d, T):
+        lat = max(d.dl_lat, d.ul_lat)
+        return max(0.0, (T - lat) / instance_time_ref(gemm, d))
+
+    lo = 0.0
+    hi = max(d.dl_lat + d.ul_lat for d in fits) + \
+        C * min(instance_time_ref(gemm, d) for d in fits)
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        if sum(cap(d, mid) for d in fits) >= C:
+            hi = mid
+        else:
+            lo = mid
+        if hi - lo < tol * hi:
+            break
+    T = hi
+    caps = np.array([cap(d, T) for d in fits])
+    w = _largest_remainder_ref(caps / max(caps.sum(), 1e-12) * C, C)
+    assignments = [cm.Assignment(device_id=d.device_id, r0=0, r1=gemm.m,
+                                 c0=0, c1=gemm.q)
+                   for d, wi in zip(fits, w) if wi > 0]
+    inst_per_dev = {d.device_id: wi for d, wi in zip(fits, w) if wi > 0}
+    real = max((max(d.dl_lat, d.ul_lat) + wi * instance_time_ref(gemm, d))
+               for d, wi in zip(fits, w) if wi > 0)
+    plan = cm.Plan(gemm=gemm, assignments=assignments, makespan=real,
+                   lower_bound=lower_bound_ref(gemm, devices),
+                   excluded=[d.device_id for d in devices
+                             if d.device_id not in inst_per_dev])
+    plan.instances = inst_per_dev
+    return plan

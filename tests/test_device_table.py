@@ -1,0 +1,169 @@
+"""Fleet-array fast-path equivalence: the vectorized ``DeviceTable`` solver
+must reproduce the scalar per-device reference (``tests/_scalar_oracle.py``
+— the pre-vectorization hot path, kept verbatim) on heterogeneous fleets:
+same shares, same integer assignments, same excluded set, makespan to
+<=1e-9 relative (the only tolerated divergence is the closed-form Eq. 7
+memory cap vs. the oracle's 40-iteration bisection, ~1e-12 relative)."""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+import _scalar_oracle as ref
+
+from repro.core import cost_model as cm
+from repro.sim.devices import sample_fleet
+
+
+def _fleet(n, seed=0):
+    return sample_fleet(n, np.random.default_rng(seed))
+
+
+def _assert_plans_equal(p_ref, p_vec, rel=1e-9):
+    assert p_vec.assignments == p_ref.assignments
+    assert p_vec.excluded == p_ref.excluded
+    assert p_vec.n_split == p_ref.n_split
+    assert p_vec.instances == p_ref.instances
+    assert p_vec.makespan == pytest.approx(p_ref.makespan, rel=rel)
+    assert p_vec.lower_bound == pytest.approx(p_ref.lower_bound, rel=rel)
+
+
+def test_device_table_columns_match_devices():
+    devs = _fleet(17)
+    tab = cm.DeviceTable.from_devices(devs)
+    assert len(tab) == 17
+    for i, d in enumerate(devs):
+        assert tab.ids[i] == d.device_id
+        assert tab.flops[i] == d.flops
+        assert tab.memory[i] == d.memory
+        assert tab.id_index[d.device_id] == i
+    assert tab.flops_sum == pytest.approx(sum(d.flops for d in devs))
+    # materialized devices round-trip
+    assert cm.DeviceTable.from_devices(tab.devices).ids.tolist() \
+        == tab.ids.tolist()
+
+
+def test_ensure_passthrough_and_fleet_duck_typing():
+    devs = _fleet(5)
+    tab = cm.DeviceTable.from_devices(devs)
+    assert cm.DeviceTable.ensure(tab) is tab
+    from repro.api import Fleet
+    fleet = Fleet.from_devices(devs)
+    assert cm.DeviceTable.ensure(fleet) is fleet.table()
+    assert fleet.table() is fleet.table()       # cached per instance
+
+
+def test_max_share_vec_matches_scalar_oracle():
+    g = cm.GEMM(m=777, n=1536, q=555)
+    devs = _fleet(48, seed=3)
+    tab = cm.DeviceTable.from_devices(devs)
+    lb = ref.lower_bound_ref(g, devs)
+    for T in (lb * 0.5, lb, lb * 2, lb * 17, lb * 400):
+        s, a, b = cm._max_share_vec(g, tab, T)
+        for i, d in enumerate(devs):
+            s_i, a_i, b_i = ref.max_share_ref(g, d, T)
+            assert s[i] == pytest.approx(s_i, rel=1e-9, abs=1e-18)
+            assert a[i] == pytest.approx(a_i, rel=1e-9, abs=1e-12)
+            assert b[i] == pytest.approx(b_i, rel=1e-9, abs=1e-12)
+
+
+def test_solve_gemm_matches_scalar_oracle_fixed_shapes():
+    for (m, n, q, d, seed) in [(512, 1024, 768, 16, 0),
+                               (200, 300, 170, 8, 1),
+                               (2048, 4096, 2048, 64, 2),
+                               (64, 4096, 64, 4, 3)]:
+        g = cm.GEMM(m=m, n=n, q=q)
+        devs = _fleet(d, seed)
+        _assert_plans_equal(ref.solve_gemm_ref(g, devs),
+                            cm.solve_gemm(g, devs))
+
+
+def test_solve_gemm_matches_oracle_homogeneous_fleet():
+    """Homogeneous fleets maximize share ties — the argsort/heap band
+    placement must still agree exactly."""
+    devs = [cm.Device(flops=1e12, dl_bw=1e9, ul_bw=1e8, memory=512e6,
+                      device_id=i) for i in range(24)]
+    g = cm.GEMM(m=1024, n=2048, q=1024)
+    _assert_plans_equal(ref.solve_gemm_ref(g, devs), cm.solve_gemm(g, devs))
+
+
+def test_solve_gemm_matches_oracle_with_caches():
+    """Churn's cache-aware re-solve (rows/cols already resident) hits the
+    rows_cached/cols_cached path."""
+    g = cm.GEMM(m=640, n=1024, q=384)
+    devs = _fleet(12, seed=5)
+    caches = {d.device_id: (float(i * 7 % 60), float(i * 13 % 40))
+              for i, d in enumerate(devs)}
+    _assert_plans_equal(ref.solve_gemm_ref(g, devs, caches=caches),
+                        cm.solve_gemm(g, devs, caches=caches))
+
+
+def test_solve_gemm_matches_oracle_memory_bound_n_split():
+    """Tiny memory forces the contraction-split recursion in both paths."""
+    devs = [cm.Device(flops=1e13, dl_bw=1e8, ul_bw=1e7, memory=64e6,
+                      device_id=i) for i in range(8)]
+    g = cm.GEMM(m=4096, n=131072, q=4096)
+    p_ref = ref.solve_gemm_ref(g, devs)
+    p_vec = cm.solve_gemm(g, devs)
+    assert p_vec.n_split == p_ref.n_split > 1
+    _assert_plans_equal(p_ref, p_vec)
+
+
+def test_solve_batched_matches_scalar_oracle():
+    for count, n_dev, seed in [(512, 32, 0), (64, 8, 1), (7, 48, 2)]:
+        g = cm.GEMM(m=128, n=64, q=128, count=count)
+        devs = _fleet(n_dev, seed)
+        _assert_plans_equal(ref.solve_batched_ref(g, devs),
+                            cm.solve_batched(g, devs))
+
+
+def test_solve_batched_fallback_matches_oracle():
+    """No device fits a whole instance -> both fall back to the sub-GEMM
+    decomposition with the count multiplier."""
+    devs = [cm.Device(flops=1e12, dl_bw=1e8, ul_bw=1e7, memory=1e6,
+                      device_id=i) for i in range(6)]
+    g = cm.GEMM(m=512, n=512, q=512, count=9)
+    _assert_plans_equal(ref.solve_batched_ref(g, devs),
+                        cm.solve_batched(g, devs))
+
+
+def test_plan_makespan_and_lower_bound_match_oracle():
+    g = cm.GEMM(m=512, n=1024, q=768)
+    devs = _fleet(16)
+    plan = cm.solve_gemm(g, devs)
+    assert cm.plan_makespan(g, devs, plan) \
+        == pytest.approx(ref.plan_makespan_ref(g, devs, plan), rel=1e-12)
+    assert cm.lower_bound(g, devs) \
+        == pytest.approx(ref.lower_bound_ref(g, devs), rel=1e-12)
+
+
+def test_homogenized_table_matches_homogenize():
+    from repro.core.scheduler import _homogenize
+    devs = _fleet(20, seed=7)
+    tab = cm.DeviceTable.from_devices(devs).homogenized()
+    hom = _homogenize(devs)
+    assert np.allclose(tab.flops, [d.flops for d in hom], rtol=0)
+    assert np.allclose(tab.memory, [d.memory for d in hom], rtol=0)
+    g = cm.GEMM(m=512, n=768, q=512)
+    _assert_plans_equal(ref.solve_gemm_ref(g, hom), cm.solve_gemm(g, tab))
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(64, 2048), n=st.integers(64, 8192),
+       q=st.integers(64, 2048), d=st.integers(2, 64),
+       seed=st.integers(0, 5))
+def test_property_vectorized_solver_equals_oracle(m, n, q, d, seed):
+    """The headline property: on random heterogeneous fleets the fleet-array
+    solver and the scalar oracle produce the same plan."""
+    g = cm.GEMM(m=m, n=n, q=q)
+    devs = _fleet(d, seed)
+    _assert_plans_equal(ref.solve_gemm_ref(g, devs), cm.solve_gemm(g, devs))
+
+
+@settings(max_examples=10, deadline=None)
+@given(count=st.integers(2, 600), d=st.integers(2, 48),
+       seed=st.integers(0, 5))
+def test_property_batched_solver_equals_oracle(count, d, seed):
+    g = cm.GEMM(m=96, n=64, q=160, count=count)
+    devs = _fleet(d, seed)
+    _assert_plans_equal(ref.solve_batched_ref(g, devs),
+                        cm.solve_batched(g, devs))
