@@ -65,6 +65,7 @@ def bench_core(matrix=MATRIX, include_kernels: bool = False) -> dict:
         "plan_cache_ok": bool(min_speedup >= MIN_CACHE_SPEEDUP),
         "event_engine": bench_event_engine(),
         "executor": bench_executor(),
+        "fleet_train": bench_fleet_train(),
     }
     if include_kernels:
         payload["kernels"] = bench_kernel_rows()
@@ -127,6 +128,61 @@ def bench_executor(shapes=EXECUTOR_SHAPES, reps: int = 3) -> dict:
         "verify": True,
         "min_jax_vs_numpy_x": min_x,
         "jax_ge_numpy": bool(min_x >= 1.0),
+    }
+
+
+def bench_fleet_train(n_devices: int = 16, batch: int = 2,
+                      seq: int = 32) -> dict:
+    """PS-centric end-to-end training step (``CleaveRuntime.train_step``):
+    one warm-up step (plan solves + tracing), one measured step, and the
+    per-step loss checked against the monolithic jitted step — the §3.2
+    "train on the fleet with exact semantics" claim as a tracked number."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.api import CleaveRuntime, Fleet
+    from repro.configs.base import get_config
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.launch.steps import make_train_step
+    from repro.models import model as M
+    from repro.optim import adam
+
+    cfg = get_config("llama3-8b").reduced()
+    opt_cfg = adam.AdamConfig(lr=3e-4, warmup_steps=2, total_steps=10)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adam.init(params, opt_cfg)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                                  global_batch=batch, seed=0))
+    chunks = dict(q_chunk=16, k_chunk=16, loss_chunk=16)
+    mono = jax.jit(make_train_step(cfg, opt_cfg, **chunks))
+    rt = CleaveRuntime(arch=cfg, fleet=Fleet.sample(n_devices, seed=0))
+
+    p_m, o_m = params, opt
+    p_f, o_f = params, opt
+    worst_rel = 0.0
+    rep = None
+    for step in range(2):                      # step 0 warms, step 1 counts
+        b = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+        p_m, o_m, met_m = mono(p_m, o_m, b)
+        t0 = time.perf_counter()
+        p_f, o_f, met_f = rt.train_step(p_f, o_f, b, opt_cfg=opt_cfg,
+                                        **chunks)
+        step_wall = time.perf_counter() - t0
+        rep = met_f["fleet"]
+        lm, lf = float(met_m["loss"]), float(met_f["loss"])
+        worst_rel = max(worst_rel, abs(lm - lf) / abs(lm))
+    return {
+        "arch": cfg.name + "-reduced", "devices": n_devices,
+        "batch": batch, "seq": seq,
+        "step_wall_s": round(step_wall, 3),
+        "gemms_per_step": rep.n_gemms,
+        "tasks_per_step": rep.n_tasks,
+        "fleet_exec_s": round(rep.fleet_exec_time, 4),
+        "gemms_per_sec": round(rep.n_gemms / step_wall, 1),
+        "predicted_makespan_s": round(rep.predicted_makespan, 3),
+        "plan_cache_hit_rate": rep.plan_cache_hit_rate,
+        "loss_rel_err_vs_monolithic": worst_rel,
+        "parity_ok": bool(worst_rel <= 1e-4),
     }
 
 
@@ -267,18 +323,25 @@ def main(out_path: str = "BENCH_core.json",
               f"numpy={r['numpy']['gflops']} GF/s "
               f"jax={r['jax']['gflops']} GF/s "
               f"({r['jax_vs_numpy_x']}x)")
+    ft = payload["fleet_train"]
+    print(f"fleet-train/{ft['arch']}/D={ft['devices']}: "
+          f"{ft['step_wall_s']}s/step {ft['gemms_per_step']} gemms "
+          f"({ft['gemms_per_sec']}/s) parity "
+          f"{'OK' if ft['parity_ok'] else 'FAIL vs monolithic step'}")
     for k in payload.get("kernels", []):
         print(f"{k['name']}: {k['us_per_call']}us")
     cache_ok = payload["plan_cache_ok"]
     exec_ok = ex["jax_ge_numpy"]
     # jax>=numpy is recorded + reported but not an exit gate: a few-percent
-    # timing margin on a noisy shared runner must not fail unrelated pushes
+    # timing margin on a noisy shared runner must not fail unrelated pushes.
+    # fleet-train parity IS a gate: it is numerics, not timing.
     print(f"wrote {out_path}; min plan-cache speedup "
           f"{payload['min_plan_cache_speedup_x']}x "
           f"({'OK' if cache_ok else f'FAIL: need >={MIN_CACHE_SPEEDUP}x'}); "
           f"executor jax>=numpy "
           f"({'OK' if exec_ok else 'WARN: jax slower than numpy this run'})")
-    return 0 if cache_ok and ee["analytic_match_ok"] else 1
+    return 0 if cache_ok and ee["analytic_match_ok"] \
+        and ft["parity_ok"] else 1
 
 
 if __name__ == "__main__":

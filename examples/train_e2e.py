@@ -6,6 +6,12 @@ Run (CPU, ~10 min at the default scale):
     PYTHONPATH=src python examples/train_e2e.py
 Faster sanity run:
     PYTHONPATH=src python examples/train_e2e.py --steps 60 --d-model 256
+
+PS-centric fleet training (every projection GEMM planned, executed,
+Freivalds-verified — and churn-recovered — on a simulated edge fleet,
+§3.2; loss/params match the monolithic step to ≤1e-4, docs/TRAINING.md):
+    PYTHONPATH=src python examples/train_e2e.py --backend fleet \
+        --steps 5 --batch 2 --seq 32 --fleet-devices 16 --fail-step 2
 """
 import argparse
 import sys
@@ -23,6 +29,13 @@ ap.add_argument("--ckpt-dir", default=None)
 ap.add_argument("--edge-plan", type=int, default=0, metavar="N",
                 help="also project this run onto an N-device edge fleet "
                      "via the CleaveRuntime session API")
+ap.add_argument("--backend", default="jax", choices=("jax", "fleet"),
+                help="fleet: run every training GEMM through the "
+                     "CleaveRuntime fleet executors (PS-centric, §3.2)")
+ap.add_argument("--fleet-devices", type=int, default=16)
+ap.add_argument("--fail-step", type=int, default=None,
+                help="fleet backend: inject a device failure during this "
+                     "step (exercises churn.recover mid-step)")
 args = ap.parse_args()
 
 argv = ["--arch", "llama3-8b", "--reduced",
@@ -34,4 +47,10 @@ if args.ckpt_dir:
     argv += ["--ckpt-dir", args.ckpt_dir]
 if args.edge_plan:
     argv += ["--edge-plan", str(args.edge_plan)]
+if args.backend == "fleet":
+    argv += ["--backend", "fleet",
+             "--fleet-devices", str(args.fleet_devices),
+             "--log-every", "1"]
+    if args.fail_step is not None:
+        argv += ["--fail-step", str(args.fail_step), "--fail-ids", "1"]
 sys.exit(train_main(argv))

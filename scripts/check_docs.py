@@ -1,0 +1,123 @@
+"""Docs-health checker: (a) every intra-repo markdown link resolves, and
+(b) every ``examples/*.py`` runs green in a smoke-scale mode — so the docs
+and the runnable surface they point at cannot silently rot.
+
+Run by the CI ``docs-health`` job (and usable locally):
+
+    PYTHONPATH=src python scripts/check_docs.py            # links + examples
+    python scripts/check_docs.py --links-only              # fast, no deps
+    PYTHONPATH=src python scripts/check_docs.py --examples-only
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+import time
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# markdown files whose links are checked: repo root + docs/
+MD_DIRS = (".", "docs")
+
+# inline links [text](target); targets that are URLs / anchors are skipped
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+# how each example is smoked: keep each invocation well under a minute so
+# the whole job stays cheap.  An entry of None means "run as-is".
+EXAMPLE_SMOKE_ARGS = {
+    "train_e2e.py": ["--steps", "2", "--layers", "2", "--d-model", "128",
+                     "--vocab", "512", "--batch", "2", "--seq", "64"],
+}
+EXAMPLE_TIMEOUT_S = 600
+
+
+def iter_markdown():
+    for d in MD_DIRS:
+        full = os.path.join(REPO, d)
+        if not os.path.isdir(full):
+            continue
+        for name in sorted(os.listdir(full)):
+            if name.endswith(".md"):
+                yield os.path.join(full, name)
+
+
+def check_links() -> list:
+    """Returns a list of "file: broken-target" strings."""
+    bad = []
+    for md in iter_markdown():
+        base = os.path.dirname(md)
+        rel_md = os.path.relpath(md, REPO)
+        with open(md, encoding="utf-8") as f:
+            text = f.read()
+        for target in _LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = os.path.normpath(os.path.join(base, path))
+            if not os.path.exists(resolved):
+                bad.append(f"{rel_md}: broken link -> {target}")
+    return bad
+
+
+def run_examples() -> list:
+    """Runs each example in smoke mode; returns failure descriptions."""
+    ex_dir = os.path.join(REPO, "examples")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    failures = []
+    for name in sorted(os.listdir(ex_dir)):
+        if not name.endswith(".py"):
+            continue
+        cmd = [sys.executable, os.path.join(ex_dir, name)]
+        cmd += EXAMPLE_SMOKE_ARGS.get(name) or []
+        t0 = time.perf_counter()
+        try:
+            proc = subprocess.run(cmd, cwd=REPO, env=env,
+                                  capture_output=True, text=True,
+                                  timeout=EXAMPLE_TIMEOUT_S)
+        except subprocess.TimeoutExpired:
+            failures.append(f"examples/{name}: timed out after "
+                            f"{EXAMPLE_TIMEOUT_S}s")
+            continue
+        dt = time.perf_counter() - t0
+        if proc.returncode != 0:
+            tail = "\n".join(proc.stderr.strip().splitlines()[-12:])
+            failures.append(f"examples/{name}: exit {proc.returncode} "
+                            f"after {dt:.0f}s\n{tail}")
+        else:
+            print(f"examples/{name}: OK ({dt:.0f}s)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--links-only", action="store_true")
+    ap.add_argument("--examples-only", action="store_true")
+    args = ap.parse_args(argv)
+
+    failures = []
+    if not args.examples_only:
+        bad = check_links()
+        n_md = len(list(iter_markdown()))
+        print(f"links: {n_md} markdown files checked, "
+              f"{len(bad)} broken link(s)")
+        failures += bad
+    if not args.links_only:
+        failures += run_examples()
+    for f in failures:
+        print(f"FAIL {f}")
+    if failures:
+        print(f"docs-health: {len(failures)} failure(s)")
+        return 1
+    print("docs-health: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

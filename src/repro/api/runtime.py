@@ -207,6 +207,10 @@ class CleaveRuntime:
         # (kernels.ops.PadCache, created lazily so numpy-only sessions
         # never import jax)
         self._pad_cache = None
+        # lazily-built PS-centric training sessions, keyed by their
+        # executor options so repeated train_step() calls share warm plan
+        # caches and per-run step counters (repro.train_loop)
+        self._train_sessions: Dict[tuple, object] = {}
 
     # ---------------------------------------------------------------- plan --
 
@@ -433,6 +437,63 @@ class CleaveRuntime:
             "n_levels": report.n_levels, "n_tasks": report.n_tasks,
             "verified": report.verified})
         return report
+
+    # ---------------------------------------------------------------- train --
+
+    def train_session(self, opt_cfg=None, *, backend: str = "numpy",
+                      kernel: str = "auto", dtype_policy=None,
+                      verify: bool = True, q_chunk: int = 64,
+                      k_chunk: int = 64, loss_chunk: int = 64):
+        """A fresh PS-centric training session
+        (:class:`repro.train_loop.FleetTrainSession`): every projection GEMM
+        of ``session.step(params, opt_state, batch)`` — forward and the
+        dA/dW backward mirrors — executes through this runtime's fleet
+        executors (plan cache, Freivalds, churn recovery), while the PS
+        hosts norms/softmax/loss/AdamW (§3.2)."""
+        from repro.train_loop import FleetTrainSession
+        return FleetTrainSession(self, opt_cfg=opt_cfg, backend=backend,
+                                 kernel=kernel, dtype_policy=dtype_policy,
+                                 verify=verify, q_chunk=q_chunk,
+                                 k_chunk=k_chunk, loss_chunk=loss_chunk)
+
+    def train_step(self, params, opt_state, batch, *, opt_cfg=None,
+                   backend: str = "numpy", kernel: str = "auto",
+                   verify: bool = True,
+                   fail_ids: Sequence[int] = (), fail_at_gemm: int = 0,
+                   q_chunk: int = 64, k_chunk: int = 64,
+                   loss_chunk: int = 64):
+        """One fleet-executed training step of the session architecture:
+        numerically matches the monolithic jitted
+        ``launch.steps.make_train_step`` while every DAG GEMM runs on the
+        fleet.  Returns ``(params, opt_state, metrics)``;
+        ``metrics["fleet"]`` is the per-step
+        :class:`~repro.train_loop.FleetStepReport` (measured executor time
+        vs ``engine.price_plan`` predicted makespan, task/recovery counts,
+        cache hit rate).
+
+        ``fail_ids`` injects a mid-step device failure at the
+        ``fail_at_gemm``-th GEMM — the in-flight GEMM recovers exactly via
+        ``churn.recover``, the devices are evicted, and cached plans are
+        patched — without corrupting the step.  Sessions are cached per
+        option set, so repeated calls stay warm; use :meth:`train_session`
+        for explicit session control."""
+        # AdamConfig is a frozen dataclass: keying by value means equal
+        # configs share a warm session (and a dead config's recycled id
+        # can never resurrect the wrong optimizer settings); normalize
+        # None to the default so it shares too
+        if opt_cfg is None:
+            from repro.optim import adam
+            opt_cfg = adam.AdamConfig()
+        key = (opt_cfg, backend, kernel, verify, q_chunk, k_chunk,
+               loss_chunk)
+        session = self._train_sessions.get(key)
+        if session is None:
+            session = self.train_session(
+                opt_cfg, backend=backend, kernel=kernel, verify=verify,
+                q_chunk=q_chunk, k_chunk=k_chunk, loss_chunk=loss_chunk)
+            self._train_sessions[key] = session
+        return session.step(params, opt_state, batch, fail_ids=fail_ids,
+                            fail_at_gemm=fail_at_gemm)
 
     # -------------------------------------------------------------- recover --
 

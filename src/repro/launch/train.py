@@ -5,9 +5,19 @@ production-mesh entry point.  Wires the synthetic data pipeline, the model
 zoo, AdamW, periodic checkpointing, and (when devices allow) the production
 mesh + CLEAVE 2-D shardings.
 
+``--backend fleet`` runs every training step PS-centrically through the
+:class:`~repro.api.CleaveRuntime` fleet executors (§3.2): each projection
+GEMM — forward and backward — is planned, dispatched, Freivalds-verified,
+and (under ``--fail-step``) churn-recovered on a simulated edge fleet,
+while the PS hosts the non-GEMM ops and AdamW.  Loss and parameters match
+the monolithic jitted step to ≤1e-4 relative (see docs/TRAINING.md).
+
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --reduced \
       --steps 100 --batch 8 --seq 128 [--ckpt-dir ckpts]
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --reduced \
+      --backend fleet --fleet-devices 16 --steps 5 --batch 2 --seq 32 \
+      --fail-step 2 --fail-ids 3,7
 """
 from __future__ import annotations
 
@@ -37,6 +47,29 @@ def main(argv=None):
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--mesh", default=None, help="e.g. 2x2 (host devices)")
     ap.add_argument("--metrics-out", default=None)
+    ap.add_argument("--backend", default="jax", choices=("jax", "fleet"),
+                    help="jax: monolithic jitted step; fleet: every "
+                         "projection GEMM executes on a simulated edge "
+                         "fleet via the CleaveRuntime session (PS-centric "
+                         "training, §3.2)")
+    ap.add_argument("--fleet-devices", type=int, default=16,
+                    help="fleet size for --backend fleet")
+    ap.add_argument("--fleet-exec", default="numpy",
+                    choices=("numpy", "jax"),
+                    help="fleet executor substrate (numpy: float64 host "
+                         "stand-in; jax: Pallas/XLA batched kernels)")
+    ap.add_argument("--fleet-kernel", default="auto",
+                    help="jax substrate kernel: auto | pallas | xla")
+    ap.add_argument("--fail-step", type=int, default=None,
+                    help="inject a device failure during this step "
+                         "(--backend fleet): the in-flight GEMM recovers "
+                         "via churn.recover, the devices are evicted, "
+                         "cached plans are patched")
+    ap.add_argument("--fail-ids", default="",
+                    help="comma-separated device ids for --fail-step")
+    ap.add_argument("--fail-at-gemm", type=int, default=0,
+                    help="GEMM index within --fail-step at which the "
+                         "failure strikes")
     ap.add_argument("--edge-plan", type=int, default=0, metavar="N",
                     help="before training, plan this config's batch over an "
                          "N-device edge fleet via the CleaveRuntime session "
@@ -81,6 +114,9 @@ def main(argv=None):
 
     rules = None
     if args.mesh:
+        if args.backend == "fleet":
+            raise SystemExit("--mesh and --backend fleet are exclusive: "
+                             "the fleet IS the device layer")
         dims = tuple(int(x) for x in args.mesh.split("x"))
         mesh = jax.make_mesh(dims, ("data", "model")[-len(dims):])
         rules = make_rules(mesh, mode="train")
@@ -98,10 +134,36 @@ def main(argv=None):
                                   seq_len=args.seq,
                                   global_batch=args.batch,
                                   seed=args.seed))
-    step_fn = jax.jit(make_train_step(cfg, opt_cfg, rules=rules,
-                                      q_chunk=64, k_chunk=64,
-                                      loss_chunk=64),
-                      donate_argnums=(0, 1))
+    fleet_session = None
+    fail_ids = [int(i) for i in args.fail_ids.split(",") if i.strip()]
+    if args.fail_step is not None and not fail_ids:
+        raise SystemExit("--fail-step needs --fail-ids (comma-separated "
+                         "device ids to fail)")
+    if (args.fail_step is not None or fail_ids) \
+            and args.backend != "fleet":
+        raise SystemExit("--fail-step/--fail-ids inject fleet device "
+                         "failures; pass --backend fleet")
+    if args.fail_step is not None and args.fail_step >= args.steps:
+        raise SystemExit(f"--fail-step {args.fail_step} never runs: the "
+                         f"run has only {args.steps} step(s)")
+    if args.backend == "fleet":
+        from repro.api import CleaveRuntime, Fleet
+        rt = CleaveRuntime(arch=cfg,
+                           fleet=Fleet.sample(args.fleet_devices,
+                                              seed=args.seed),
+                           accounting=args.edge_accounting)
+        fleet_session = rt.train_session(
+            opt_cfg, backend=args.fleet_exec, kernel=args.fleet_kernel,
+            q_chunk=64, k_chunk=64, loss_chunk=64)
+        print(f"fleet backend: {len(rt.fleet)} devices "
+              f"({args.fleet_exec} executor), accounting="
+              f"{args.edge_accounting}")
+        step_fn = None
+    else:
+        step_fn = jax.jit(make_train_step(cfg, opt_cfg, rules=rules,
+                                          q_chunk=64, k_chunk=64,
+                                          loss_chunk=64),
+                          donate_argnums=(0, 1))
 
     mgr = None
     if args.ckpt_dir:
@@ -124,17 +186,34 @@ def main(argv=None):
             batch["encoder_feats"] = jax.numpy.asarray(
                 rnga.standard_normal((args.batch, 2 * args.seq,
                                       cfg.d_model)), dtype=cfg.dtype)
-        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if fleet_session is not None:
+            fid = fail_ids if step == args.fail_step else ()
+            params, opt_state, metrics = fleet_session.step(
+                params, opt_state, batch, fail_ids=fid,
+                fail_at_gemm=args.fail_at_gemm)
+        else:
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
         loss = float(metrics["loss"])
-        history.append({"step": step, "loss": loss,
-                        "grad_norm": float(metrics["grad_norm"]),
-                        "lr": float(metrics["lr"])})
+        row = {"step": step, "loss": loss,
+               "grad_norm": float(metrics["grad_norm"]),
+               "lr": float(metrics["lr"])}
+        if fleet_session is not None:
+            rep = metrics["fleet"]
+            row.update(fleet_gemms=rep.n_gemms, fleet_tasks=rep.n_tasks,
+                       fleet_recovered=rep.n_recovered,
+                       fleet_verified=rep.verified,
+                       fleet_exec_time=rep.fleet_exec_time,
+                       fleet_predicted_makespan=rep.predicted_makespan,
+                       fleet_cache_hit_rate=rep.plan_cache_hit_rate)
+        history.append(row)
         if step % args.log_every == 0 or step == args.steps - 1:
             dt = time.perf_counter() - t0
             print(f"step {step:5d} loss {loss:8.4f} "
                   f"gnorm {float(metrics['grad_norm']):8.3f} "
                   f"lr {float(metrics['lr']):.2e} "
                   f"({dt / (step + 1):.2f}s/step)")
+            if fleet_session is not None:
+                print(f"           {metrics['fleet'].log_line()}")
         if mgr is not None:
             mgr.maybe_save(step, {"params": params, "opt": opt_state},
                            {"loss": loss})

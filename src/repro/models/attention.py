@@ -231,9 +231,9 @@ def init_attention(cfg, key):
 def _project_qkv(cfg, p, x):
     B, S, d = x.shape
     H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    q = x @ constrain(p["wq"], "w_in_use", "w_out")
-    k = x @ constrain(p["wk"], "w_in_use", "w_out")
-    v = x @ constrain(p["wv"], "w_in_use", "w_out")
+    q = L.pdot(x, constrain(p["wq"], "w_in_use", "w_out"))
+    k = L.pdot(x, constrain(p["wk"], "w_in_use", "w_out"))
+    v = L.pdot(x, constrain(p["wv"], "w_in_use", "w_out"))
     if cfg.qkv_bias:
         q = q + p["bq"]
         k = k + p["bk"]
@@ -283,7 +283,7 @@ def attention_block(cfg, p, x, positions, *, causal=True, window=0,
                             q_chunk=q_chunk, k_chunk=k_chunk)
     out = constrain(out, "batch", "seq", "heads", "head_dim")
     out = out.reshape(B, S, -1)
-    out = constrain(out @ constrain(p["wo"], "w_out", "w_in_use"),
+    out = constrain(L.pdot(out, constrain(p["wo"], "w_out", "w_in_use")),
                     "batch", "seq", "embed")
     return out, (k, v)
 
@@ -293,8 +293,10 @@ def project_cross_kv(cfg, p, enc_x):
     decode session and for every decoder layer during training)."""
     B, S, _ = enc_x.shape
     K, hd = cfg.n_kv_heads, cfg.head_dim
-    k = (enc_x @ constrain(p["wk"], "w_in_use", "w_out")).reshape(B, S, K, hd)
-    v = (enc_x @ constrain(p["wv"], "w_in_use", "w_out")).reshape(B, S, K, hd)
+    k = L.pdot(enc_x, constrain(p["wk"], "w_in_use",
+                                "w_out")).reshape(B, S, K, hd)
+    v = L.pdot(enc_x, constrain(p["wv"], "w_in_use",
+                                "w_out")).reshape(B, S, K, hd)
     if cfg.qk_norm:
         k = L.rmsnorm(p["k_norm"], k, cfg.norm_eps)
     return k, v
@@ -360,17 +362,17 @@ def _mla_q(cfg, p, x):
     B, S, _ = x.shape
     H, hd, rd = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim
     if cfg.q_lora_rank:
-        qc = L.rmsnorm(p["q_norm"], x @ p["w_dq"], cfg.norm_eps)
-        q = qc @ constrain(p["w_uq"], "w_in_use", "w_out")
+        qc = L.rmsnorm(p["q_norm"], L.pdot(x, p["w_dq"]), cfg.norm_eps)
+        q = L.pdot(qc, constrain(p["w_uq"], "w_in_use", "w_out"))
     else:
-        q = x @ constrain(p["w_q"], "w_in_use", "w_out")
+        q = L.pdot(x, constrain(p["w_q"], "w_in_use", "w_out"))
     q = q.reshape(B, S, H, hd + rd)
     return q[..., :hd], q[..., hd:]
 
 
 def _mla_ckv(cfg, p, x, positions):
     r, rd = cfg.kv_lora_rank, cfg.rope_head_dim
-    ckv_kpe = x @ constrain(p["w_dkv"], "w_in_use", None)
+    ckv_kpe = L.pdot(x, constrain(p["w_dkv"], "w_in_use", None))
     c_kv = L.rmsnorm(p["kv_norm"], ckv_kpe[..., :r], cfg.norm_eps)
     k_pe = ckv_kpe[..., None, r:]                       # (B,S,1,rd)
     k_pe = L.apply_rope(k_pe, positions, cfg.rope_theta)
@@ -384,8 +386,10 @@ def mla_block(cfg, p, x, positions, *, window=0, q_chunk=256, k_chunk=512):
     q_nope, q_pe = _mla_q(cfg, p, x)
     q_pe = L.apply_rope(q_pe, positions, cfg.rope_theta)
     c_kv, k_pe = _mla_ckv(cfg, p, x, positions)
-    k_nope = (c_kv @ constrain(p["w_uk"], None, "w_out")).reshape(B, S, H, hd)
-    v = (c_kv @ constrain(p["w_uv"], None, "w_out")).reshape(B, S, H, vd)
+    k_nope = L.pdot(c_kv, constrain(p["w_uk"], None,
+                                    "w_out")).reshape(B, S, H, hd)
+    v = L.pdot(c_kv, constrain(p["w_uv"], None,
+                               "w_out")).reshape(B, S, H, vd)
     q = jnp.concatenate([q_nope, q_pe], axis=-1)
     k = jnp.concatenate(
         [k_nope, jnp.broadcast_to(k_pe[:, :, None], (B, S, H, rd))], axis=-1)
@@ -395,7 +399,7 @@ def mla_block(cfg, p, x, positions, *, window=0, q_chunk=256, k_chunk=512):
     out = chunked_attention(q, k, v, causal=True, window=window,
                             q_chunk=q_chunk, k_chunk=k_chunk)
     out = out.reshape(B, S, H * vd)
-    out = constrain(out @ constrain(p["wo"], "w_out", "w_in_use"),
+    out = constrain(L.pdot(out, constrain(p["wo"], "w_out", "w_in_use")),
                     "batch", "seq", "embed")
     return out, (c_kv, k_pe)
 

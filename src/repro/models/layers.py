@@ -9,6 +9,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.parallel.sharding import constrain
+from repro.train_loop import hook as _gemm_hook
+
+
+def pdot(x, w):
+    """Projection matmul ``x @ w`` (x: (..., n), w: (n, q)).
+
+    Every GEMM the §3.2 DAG assigns to the device fleet goes through here.
+    With no hook installed (the default — all jitted/monolithic paths) this
+    is exactly ``x @ w``.  Inside a PS-centric training session
+    (``repro.train_loop``) the installed hook executes the GEMM — and, via
+    its custom VJP, the dA/dW backward mirrors — on the fleet executors."""
+    hook = _gemm_hook.active()
+    if hook is None:
+        return x @ w
+    return hook(x, w)
 
 
 def dtype_of(cfg):
@@ -136,11 +151,12 @@ def init_swiglu(key, d, d_ff, dtype):
 
 def swiglu(params, x):
     x = constrain(x, "batch", "seq", "embed_use")
-    g = x @ constrain(params["w_gate"], "w_in_use", "w_out")
-    u = x @ constrain(params["w_up"], "w_in_use", "w_out")
+    g = pdot(x, constrain(params["w_gate"], "w_in_use", "w_out"))
+    u = pdot(x, constrain(params["w_up"], "w_in_use", "w_out"))
     h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
     h = constrain(h, "batch", "seq", "ffn")
-    return constrain(h @ constrain(params["w_down"], "w_out", "w_in_use"),
+    return constrain(pdot(h, constrain(params["w_down"], "w_out",
+                                       "w_in_use")),
                      "batch", "seq", "embed")
 
 
@@ -172,4 +188,4 @@ def lm_logits(head_params, embed_params, x, cfg):
     # vocab must win the 'model' axis here (not the contraction dim), or
     # the per-chunk logits materialize at full vocab width
     w = constrain(w, "w_in_use", "vocab")
-    return constrain(x @ w, "batch", "seq", "vocab")
+    return constrain(pdot(x, w), "batch", "seq", "vocab")

@@ -155,8 +155,14 @@ def fuse_inputs(cfg, params, batch):
 # ----------------------------------------------------------------- forward --
 
 def forward(cfg, params, batch, *, window=0, q_chunk=256, k_chunk=512,
-            collect_kv=False, remat=True):
-    """Full forward to final hidden states. Returns (x, aux, kv_stack)."""
+            collect_kv=False, remat=True, scan_layers=True):
+    """Full forward to final hidden states. Returns (x, aux, kv_stack).
+
+    ``scan_layers=False`` unrolls the layer loop in Python (per-layer param
+    slices, no ``lax.scan``, no remat) — the PS-centric fleet training path
+    uses it so fleet-GEMM host callbacks never sit inside compiled control
+    flow.  The unrolled path computes the same values as the scan; it does
+    not collect KV (training/loss never reads it)."""
     x, positions = fuse_inputs(cfg, params, batch)
 
     cross_kv_all = None
@@ -180,13 +186,25 @@ def forward(cfg, params, batch, *, window=0, q_chunk=256, k_chunk=512,
             kv = ()
         return x, (aux, kv)
 
-    body_fn = jax.checkpoint(body) if remat else body
-    scanned = ((params["layers"], params["cross"]) if cfg.enc_dec
-               else params["layers"])
-    x, (auxs, kvs) = jax.lax.scan(body_fn, x, scanned)
+    if scan_layers:
+        body_fn = jax.checkpoint(body) if remat else body
+        scanned = ((params["layers"], params["cross"]) if cfg.enc_dec
+                   else params["layers"])
+        x, (auxs, kvs) = jax.lax.scan(body_fn, x, scanned)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        aux = jnp.sum(auxs)
+        return x, aux, kvs
+    aux = jnp.zeros((), jnp.float32)
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda t: t[i], params["layers"])
+        if cfg.enc_dec:
+            cp = jax.tree.map(lambda t: t[i], params["cross"])
+            x, (aux_i, _) = body(x, (lp, cp))
+        else:
+            x, (aux_i, _) = body(x, lp)
+        aux = aux + aux_i
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    aux = jnp.sum(auxs)
-    return x, aux, kvs
+    return x, aux, ()
 
 
 def _vocab_mask(cfg):
@@ -197,11 +215,14 @@ def _vocab_mask(cfg):
 
 
 def loss_fn(cfg, params, batch, *, window=0, q_chunk=256, k_chunk=512,
-            loss_chunk=256):
+            loss_chunk=256, scan_layers=True):
     """Mean cross-entropy over valid labels (labels < 0 are masked), computed
-    in sequence chunks so the (B,S,V) logits tensor never materializes."""
+    in sequence chunks so the (B,S,V) logits tensor never materializes.
+    ``scan_layers=False`` selects the unrolled, scan-free path (see
+    :func:`forward`) — same values, fleet-GEMM-hookable."""
     x, aux, _ = forward(cfg, params, batch, window=window,
-                        q_chunk=q_chunk, k_chunk=k_chunk)
+                        q_chunk=q_chunk, k_chunk=k_chunk,
+                        scan_layers=scan_layers)
     labels = batch["labels"]
     B, S = labels.shape
     c = loss_chunk if (S % loss_chunk == 0 and S >= loss_chunk) else S
@@ -222,8 +243,14 @@ def loss_fn(cfg, params, batch, *, window=0, q_chunk=256, k_chunk=512,
         tot, cnt = carry
         return (tot + jnp.sum(nll), cnt + jnp.sum(w)), None
 
-    (tot, cnt), _ = jax.lax.scan(jax.checkpoint(chunk_loss),
-                                 (jnp.zeros(()), jnp.zeros(())), (xr, lr))
+    if scan_layers:
+        (tot, cnt), _ = jax.lax.scan(jax.checkpoint(chunk_loss),
+                                     (jnp.zeros(()), jnp.zeros(())),
+                                     (xr, lr))
+    else:
+        tot, cnt = jnp.zeros(()), jnp.zeros(())
+        for j in range(nc):
+            (tot, cnt), _ = chunk_loss((tot, cnt), (xr[j], lr[j]))
     loss = tot / jnp.maximum(cnt, 1.0)
     metrics = {"loss": loss, "aux_loss": aux, "tokens": cnt}
     return loss + aux, metrics

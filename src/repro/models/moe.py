@@ -70,7 +70,7 @@ def _moe_block_global(cfg, p, x):
     C = capacity(cfg, T)
     xt = x.reshape(T, d)
 
-    logits = (xt.astype(jnp.float32) @ p["router"])        # (T,E)
+    logits = L.pdot(xt.astype(jnp.float32), p["router"])   # (T,E)
     probs = jax.nn.softmax(logits, axis=-1)
     top_p, top_e = jax.lax.top_k(probs, k)                  # (T,k)
     top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)  # renormalize

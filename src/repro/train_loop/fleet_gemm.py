@@ -1,0 +1,236 @@
+"""Differentiable fleet GEMM: the bridge between JAX autodiff on the PS and
+the CLEAVE executors on the (simulated) device fleet.
+
+``fleet_dot(a, b)`` is a ``jax.custom_vjp`` primitive whose primal *and*
+both cotangents are executed by the session runtime's fleet executor:
+
+* forward:   C  = A·B          (the traced forward GEMM, §3.2)
+* backward:  dA = dO·Bᵀ        (same shapes transposed — ``gemm_dag``'s
+  ``.dA`` mirror)
+*            dW = Aᵀ·dO        (the weight gradient — ``.dW`` mirror)
+
+Each host call goes through :meth:`CleaveRuntime.execute_step`, i.e. the
+plan cache, the failure/recovery path (``churn.recover``), Freivalds
+verification, and — for ``backend="jax"`` — the Pallas/XLA batched kernels
+with the session ``PadCache``.
+
+Sessions are process-global and non-nested (the callback inside a
+``pure_callback`` cannot thread ``self`` through JAX), opened via
+:meth:`FleetGemmSession.open`, which also installs the ``models.layers.pdot``
+hook.  The fleet step must run **eagerly** (no outer ``jax.jit``): the
+model's unrolled path (``forward(..., scan_layers=False)``) keeps callbacks
+out of compiled scans, so a jax-executor backend never re-enters XLA from
+inside a running computation.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.train_loop import hook as _hook
+
+_SESSION: Optional["FleetGemmSession"] = None
+
+
+@dataclass
+class GemmRecord:
+    """One fleet-executed GEMM inside a training step."""
+    m: int
+    n: int
+    q: int
+    kind: str                   # 'fwd' | 'dA' | 'dW'
+    exec_time: float            # host wall-clock of the fleet execution
+    predicted_makespan: float   # engine.price_plan of the executed plan
+    n_tasks: int
+    n_recovered: int
+    verified: bool
+    plan_cached: bool
+    failed_ids: Tuple[int, ...] = ()
+
+    @property
+    def flops(self) -> float:
+        return 2.0 * self.m * self.n * self.q
+
+
+@dataclass
+class _ArmedFailure:
+    """A scheduled mid-step device failure: injected into the ``at_gemm``-th
+    fleet execution of the step, then (optionally) escalated to a permanent
+    departure via ``CleaveRuntime.on_failure``."""
+    fail_ids: Tuple[int, ...]
+    at_gemm: int
+    evict: bool = True
+    fired: bool = False
+
+
+class FleetGemmSession:
+    """Owns the per-step GEMM trace and the executor options for one
+    PS-centric training run.  Reused across steps so plan caches stay warm
+    and per-step records can be harvested via :meth:`drain`."""
+
+    def __init__(self, runtime, *, backend: str = "numpy",
+                 kernel: str = "auto", dtype_policy=None,
+                 verify: bool = True):
+        if backend not in ("numpy", "jax"):
+            raise ValueError(f"unknown fleet backend {backend!r}; "
+                             "expected 'numpy' or 'jax'")
+        self.rt = runtime
+        self.backend = backend
+        self.kernel = kernel
+        self.dtype_policy = dtype_policy
+        self.verify = verify
+        self.records: List[GemmRecord] = []
+        self.churn_reports: list = []
+        self._armed: Optional[_ArmedFailure] = None
+        self._gemm_index = 0
+        # (m, n, q, fleet signature) -> price_plan, so steady-state steps
+        # don't re-walk identical plans just to stamp their records
+        self._price_memo: dict = {}
+
+    # ------------------------------------------------------------- control --
+
+    @contextlib.contextmanager
+    def open(self):
+        """Make this session the process-global GEMM executor and install
+        the ``pdot`` hook for the extent of the block."""
+        global _SESSION
+        if _SESSION is not None:
+            raise RuntimeError("a FleetGemmSession is already open")
+        _SESSION = self
+        try:
+            with _hook.use_hook(self.dot):
+                yield self
+        finally:
+            _SESSION = None
+
+    def arm_failure(self, fail_ids: Sequence[int], *, at_gemm: int = 0,
+                    evict: bool = True) -> None:
+        """Schedule ``fail_ids`` to vanish during the ``at_gemm``-th fleet
+        GEMM of the upcoming step: the in-flight GEMM recovers through
+        ``churn.recover`` (numerically exact), and with ``evict=True`` the
+        devices are then permanently removed (``CleaveRuntime.on_failure``),
+        so every later GEMM plans over the survivors."""
+        ids = tuple(int(i) for i in fail_ids)
+        known = set(self.rt.fleet.ids())
+        missing = [i for i in ids if i not in known]
+        if missing:
+            raise ValueError(f"cannot fail unknown devices {missing}")
+        self._armed = _ArmedFailure(fail_ids=ids, at_gemm=int(at_gemm),
+                                    evict=evict)
+
+    def drain(self) -> Tuple[List[GemmRecord], list]:
+        """Harvest (and clear) the per-step state accumulated since the
+        last call: the GEMM trace and any churn reports this step's
+        failures produced.  Also disarms a pending failure, so an aborted
+        step can't leak its injection into the next one."""
+        out, self.records = self.records, []
+        churn, self.churn_reports = self.churn_reports, []
+        self._gemm_index = 0
+        self._armed = None
+        return out, churn
+
+    # ------------------------------------------------------------ GEMM ops --
+
+    def dot(self, x, w):
+        """The ``pdot`` hook: ``x @ w`` with leading dims flattened to the
+        GEMM's ``m`` — differentiable, with both cotangent GEMMs also
+        fleet-executed."""
+        lead = x.shape[:-1]
+        out = _fleet_dot(x.reshape(-1, x.shape[-1]), w)
+        return out.reshape(lead + (w.shape[-1],))
+
+    def _price(self, gemm, plan) -> float:
+        from repro.sim.engine import price_plan
+        key = (gemm.m, gemm.n, gemm.q, gemm.b,
+               self.rt.fleet.signature())
+        if key not in self._price_memo:
+            self._price_memo[key] = price_plan(gemm, plan,
+                                               self.rt.fleet.devices)
+        return self._price_memo[key]
+
+    def _execute(self, a: np.ndarray, b: np.ndarray, kind: str) -> np.ndarray:
+        fail_ids: Tuple[int, ...] = ()
+        armed = self._armed
+        if armed is not None and not armed.fired \
+                and self._gemm_index >= armed.at_gemm:
+            fail_ids = armed.fail_ids
+            armed.fired = True
+        self._gemm_index += 1
+
+        from repro.core import cost_model as cm
+        # carry the real element width so the plan (and its cache key)
+        # matches what the DAG pricing solved for the same shape — a f32
+        # training GEMM is b=4, not the cm.GEMM default of 2
+        gemm = cm.GEMM(m=a.shape[0], n=a.shape[1], q=b.shape[1],
+                       b=int(a.dtype.itemsize))
+        rep = self.rt.execute_step(
+            a, b, gemm=gemm, fail_ids=fail_ids, verify=self.verify,
+            backend=self.backend, dtype_policy=self.dtype_policy,
+            kernel=self.kernel)
+        self.records.append(GemmRecord(
+            m=rep.gemm.m, n=rep.gemm.n, q=rep.gemm.q, kind=kind,
+            exec_time=rep.exec_time,
+            predicted_makespan=self._price(rep.gemm, rep.plan),
+            n_tasks=rep.n_tasks, n_recovered=rep.n_recovered,
+            verified=rep.verified, plan_cached=rep.plan_cached,
+            failed_ids=fail_ids))
+        if fail_ids and armed is not None and armed.evict:
+            # the failed devices are gone for good: evict them and patch the
+            # plan cache so the rest of the step plans over survivors
+            self.churn_reports.append(self.rt.on_failure(fail_ids))
+        return np.ascontiguousarray(rep.output).astype(a.dtype, copy=False)
+
+
+# ------------------------------------------------------- custom-vjp fleet dot
+
+def _host_gemm(kind: str, a, b) -> np.ndarray:
+    sess = _SESSION
+    if sess is None:
+        # hook installed without an open session (shouldn't happen through
+        # FleetGemmSession.open); degrade to the monolithic product
+        return np.asarray(a) @ np.asarray(b)
+    return sess._execute(np.asarray(a), np.asarray(b), kind)
+
+
+def _raw_fleet_dot(a, b, kind: str):
+    import functools
+
+    import jax
+
+    out_sd = jax.ShapeDtypeStruct((a.shape[0], b.shape[1]), a.dtype)
+    return jax.pure_callback(functools.partial(_host_gemm, kind),
+                             out_sd, a, b)
+
+
+def _make_fleet_dot():
+    import jax
+
+    @jax.custom_vjp
+    def fleet_dot(a, b):
+        return _raw_fleet_dot(a, b, "fwd")
+
+    def _fwd(a, b):
+        return _raw_fleet_dot(a, b, "fwd"), (a, b)
+
+    def _bwd(res, g):
+        a, b = res
+        da = _raw_fleet_dot(g, b.T, "dA")       # dA = dO · Bᵀ
+        dw = _raw_fleet_dot(a.T, g, "dW")       # dW = Aᵀ · dO
+        return da, dw
+
+    fleet_dot.defvjp(_fwd, _bwd)
+    return fleet_dot
+
+
+_FLEET_DOT = None
+
+
+def _fleet_dot(a, b):
+    global _FLEET_DOT
+    if _FLEET_DOT is None:
+        _FLEET_DOT = _make_fleet_dot()
+    return _FLEET_DOT(a, b)

@@ -1,0 +1,298 @@
+"""PS-centric training steps (§3.2, §4): real forward+backward+AdamW where
+every projection GEMM executes on the fleet and the PS hosts the rest.
+
+One step is the monolithic ``launch.steps.make_train_step`` math — the same
+``models.model.loss_fn`` and ``optim.adam.apply`` — but evaluated eagerly
+with the model's unrolled layer path and the ``FleetGemmSession`` hook
+open, so each projection GEMM (and its dA/dW mirrors under autodiff)
+lowers onto the session runtime's plan→execute→recover machinery.  Loss and
+updated parameters therefore match the monolithic jitted step to float32
+tolerance (the fleet executors are numerically exact; the numpy backend
+even accumulates in float64).
+
+Non-GEMM ops — embeddings, RMSNorm, RoPE, softmax/attention scores (the
+``attention_scores="ps"`` convention), cross-entropy, AdamW — run on the PS
+between levels, exactly the paper's Table 1/2 split (<1% of step FLOPs).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.train_loop.fleet_gemm import FleetGemmSession, GemmRecord
+
+
+@dataclass
+class FleetStepReport:
+    """Per-step fleet metrics: what actually ran on the devices, next to
+    what the event engine predicted for the planned batch."""
+    step: int
+    loss: float
+    grad_norm: float
+    lr: float
+    n_gemms: int                 # fleet GEMM executions this step
+    n_tasks: int                 # sub-GEMM tasks dispatched to devices
+    n_recovered: int             # tasks re-executed via churn.recover
+    verified: bool               # every Freivalds check passed
+    gemm_flops: float            # total fleet GEMM FLOPs this step
+    fleet_exec_time: float       # host wall spent inside the executors
+    wall_time: float             # total step wall (PS ops + fleet)
+    predicted_makespan: float    # engine.price_plan sum over DAG levels —
+    #                              the modeled edge-fleet batch GEMM time
+    plan_cache_hit_rate: float   # of executed GEMMs; the pricing pass
+    #                              pre-warms the same keys, so <1.0 means
+    #                              churn dropped plans mid-step
+    n_cold_plan_solves: int = 0  # shapes solved cold by this step's
+    #                              pricing pass (0 on steady-state steps)
+    failed_ids: Tuple[int, ...] = ()
+    n_plans_patched: int = 0     # cache patches when a failure was injected
+    records: List[GemmRecord] = field(default_factory=list, repr=False)
+
+    def log_line(self) -> str:
+        s = (f"fleet: {self.n_gemms} gemms {self.n_tasks} tasks "
+             f"{self.gemm_flops / 1e9:.2f} GFLOP "
+             f"exec {self.fleet_exec_time:.2f}s/{self.wall_time:.2f}s "
+             f"predicted {self.predicted_makespan:.1f}s "
+             f"cache {self.plan_cache_hit_rate:.0%}")
+        if self.n_cold_plan_solves:
+            s += f" ({self.n_cold_plan_solves} shapes solved cold)"
+        if self.failed_ids:
+            s += (f" | failed {list(self.failed_ids)} "
+                  f"recovered {self.n_recovered} tasks, "
+                  f"{self.n_plans_patched} plans patched")
+        return s
+
+
+# DAG GEMM families the pdot hook does NOT lower onto the fleet: per-expert
+# MoE einsums (the routed experts — shared experts go through ``swiglu``
+# and DO lower), SSM scans, RWKV time/channel mixing, and attention/cross
+# score GEMMs (the PS-host score convention) run PS-locally — see
+# docs/TRAINING.md "what runs where".
+PS_LOCAL_GEMMS = ("moe.gate", "moe.up", "moe.down",
+                  "ssm.", "tm.", "cm.",
+                  "attn.qk", "attn.av", "cross.qk", "cross.av")
+
+
+def fleet_lowered(name: str) -> bool:
+    """Whether the ``pdot`` hook lowers this DAG GEMM onto the fleet
+    (dense/GQA/MLA projections, MoE router + shared experts, cross K/V,
+    lm_head)."""
+    for suffix in (".dA", ".dW"):
+        if name.endswith(suffix):
+            name = name[: -len(suffix)]
+    if name.startswith("L") and "." in name:
+        name = name.split(".", 1)[1]
+    return not name.startswith(PS_LOCAL_GEMMS)
+
+
+def price_request(rt, request, loss_chunk: Optional[int] = None,
+                  stats: Optional[dict] = None) -> float:
+    """Predicted edge-fleet GEMM makespan of one batch: the
+    **fleet-lowered** DAG GEMMs walked level by level, each level priced as
+    the max ``engine.price_plan`` over its (warm-loaded or solved) plans —
+    the prediction the executed step is compared against.  PS-local GEMMs
+    (:data:`PS_LOCAL_GEMMS`) are skipped so the prediction covers exactly
+    the work the fleet runs.
+
+    ``loss_chunk`` mirrors ``models.model.loss_fn``'s LM-head chunking:
+    the ``lm_head`` GEMM and its dA/dW mirrors are priced as the executed
+    chunk shapes — ``nc`` *sequential* chunk GEMMs per level — so the
+    prediction walks (and warms the plan cache for) exactly the shapes the
+    training step runs.  ``stats``, if given, receives ``cold_solves`` —
+    the number of shapes this pricing pass solved cold."""
+    from dataclasses import replace
+
+    from repro.sim.engine import price_plan
+    dag = rt._dag(request)
+    nc = 1
+    if loss_chunk and request.seq % loss_chunk == 0 \
+            and request.seq >= loss_chunk:
+        nc = request.seq // loss_chunk
+    total = 0.0
+    for level in dag.levels():
+        level_time = 0.0
+        for g in level:
+            if not fleet_lowered(g.name):
+                continue
+            reps = 1
+            if nc > 1 and g.name.startswith("lm_head"):
+                # fwd (m=B·S) and dA chunk on rows; dW = Aᵀ·dO chunks on
+                # the contraction dim (one dW GEMM per loss chunk)
+                g = replace(g, n=g.n // nc) if g.name.endswith(".dW") \
+                    else replace(g, m=g.m // nc)
+                reps = nc
+            plan, cached = rt._solve_gemm(
+                g, heterogeneity_aware=request.heterogeneity_aware)
+            if stats is not None and not cached:
+                stats["cold_solves"] = stats.get("cold_solves", 0) + 1
+            level_time = max(level_time,
+                             reps * price_plan(g, plan, rt.fleet.devices))
+        total += level_time
+    return total
+
+
+class FleetTrainSession:
+    """A training run on the fleet: owns the GEMM session (so plan caches
+    stay warm across steps), the optimizer config, and the step counter.
+
+    Built by :meth:`repro.api.CleaveRuntime.train_session` (or directly);
+    :meth:`step` is the PS-centric analog of the jitted monolithic step."""
+
+    def __init__(self, runtime, cfg=None, opt_cfg=None, *,
+                 backend: str = "numpy", kernel: str = "auto",
+                 dtype_policy=None, verify: bool = True,
+                 q_chunk: int = 64, k_chunk: int = 64,
+                 loss_chunk: int = 64):
+        from repro.optim import adam
+        self.rt = runtime
+        self.cfg = cfg if cfg is not None else runtime.cfg
+        self.opt_cfg = opt_cfg or adam.AdamConfig()
+        self.gemms = FleetGemmSession(runtime, backend=backend,
+                                      kernel=kernel,
+                                      dtype_policy=dtype_policy,
+                                      verify=verify)
+        self.chunks = dict(q_chunk=q_chunk, k_chunk=k_chunk,
+                           loss_chunk=loss_chunk)
+        self.step_index = 0
+        self.reports: List[FleetStepReport] = []
+        self._priced: Dict[tuple, float] = {}
+        self._last_cold_solves = 0
+        cfg = self.cfg
+        if cfg.moe or cfg.ssm or cfg.rwkv or cfg.hybrid_parallel:
+            import warnings
+            warnings.warn(
+                f"arch {cfg.name!r}: routed-expert / recurrent GEMMs run "
+                "PS-locally — the dense projection GEMMs, MoE router, and "
+                "shared experts lower onto the fleet; predicted_makespan "
+                "covers the fleet-lowered set (docs/TRAINING.md)",
+                stacklevel=3)
+
+    # ---------------------------------------------------------------- step --
+
+    def step(self, params, opt_state, batch, *,
+             fail_ids: Sequence[int] = (), fail_at_gemm: int = 0):
+        """One fleet-executed train step.  Returns
+        ``(params, opt_state, metrics)`` like the monolithic step; metrics
+        additionally carries ``metrics["fleet"]`` (a
+        :class:`FleetStepReport`).
+
+        ``fail_ids`` injects a mid-step device failure at the
+        ``fail_at_gemm``-th fleet GEMM: the in-flight GEMM recovers through
+        ``churn.recover`` (exact output) and the devices are then evicted,
+        so the remainder of the step — and all later steps — plan over the
+        survivors.  The step's loss and parameter update are unaffected."""
+        import jax
+
+        from repro.models import model as M
+        from repro.optim import adam
+
+        predicted = self._predict(batch)
+        t0 = time.perf_counter()
+        try:
+            with self.gemms.open() as fleet:
+                if fail_ids:
+                    fleet.arm_failure(fail_ids, at_gemm=fail_at_gemm)
+
+                def lf(p, b):
+                    return M.loss_fn(self.cfg, p, b, scan_layers=False,
+                                     **self.chunks)
+
+                (loss, metrics), grads = jax.value_and_grad(
+                    lf, has_aux=True)(params, batch)
+                params2, opt2, opt_metrics = adam.apply(
+                    params, grads, opt_state, self.opt_cfg)
+        finally:
+            # drain unconditionally: an exception mid-step must not leak a
+            # partial step's records / armed failure / GEMM counter into
+            # the next step of this (cached, reused) session
+            records, churn_reports = self.gemms.drain()
+        wall = time.perf_counter() - t0
+        # report what actually happened, not what was requested: an armed
+        # failure whose at_gemm index was never reached fired nothing
+        fired_ids = tuple(sorted({int(i) for r in records
+                                  for i in r.failed_ids}))
+        if fail_ids and not fired_ids:
+            raise RuntimeError(
+                f"fail_at_gemm={fail_at_gemm} exceeds the step's "
+                f"{len(records)} fleet GEMMs: the requested failure of "
+                f"devices {sorted(int(i) for i in fail_ids)} never fired")
+        n_patched = sum(c.n_plans_patched for c in churn_reports)
+
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        report = FleetStepReport(
+            step=self.step_index, loss=float(loss),
+            grad_norm=float(metrics["grad_norm"]),
+            lr=float(metrics["lr"]),
+            n_gemms=len(records),
+            n_tasks=sum(r.n_tasks for r in records),
+            n_recovered=sum(r.n_recovered for r in records),
+            verified=all(r.verified for r in records),
+            gemm_flops=sum(r.flops for r in records),
+            fleet_exec_time=sum(r.exec_time for r in records),
+            wall_time=wall, predicted_makespan=predicted,
+            plan_cache_hit_rate=(sum(r.plan_cached for r in records)
+                                 / max(len(records), 1)),
+            n_cold_plan_solves=self._last_cold_solves,
+            failed_ids=fired_ids,
+            n_plans_patched=n_patched, records=records)
+        # the caller's report carries the full per-GEMM trace; the
+        # session-retained copy drops it so a long run doesn't grow
+        # memory by ~50 records/step (the aggregates are what the log,
+        # bench, and tests read)
+        import dataclasses
+        self.reports.append(dataclasses.replace(report, records=[]))
+        metrics["fleet"] = report
+        self.rt.history.append({
+            "event": "train_step", "step": self.step_index,
+            "loss": report.loss, "backend": self.gemms.backend,
+            "n_gemms": report.n_gemms, "n_tasks": report.n_tasks,
+            "n_recovered": report.n_recovered,
+            "verified": report.verified,
+            "predicted_makespan": report.predicted_makespan,
+            "failed_ids": list(report.failed_ids)})
+        self.step_index += 1
+        return params2, opt2, metrics
+
+    # ----------------------------------------------------------- internals --
+
+    def _predict(self, batch) -> float:
+        """Engine-priced batch GEMM makespan for this batch shape, cached
+        per (shape, fleet signature) so churn re-prices but steady-state
+        steps don't."""
+        from repro.api.runtime import PlanRequest
+        tokens = np.asarray(batch["tokens"])
+        b, s = int(tokens.shape[0]), int(tokens.shape[1])
+        request = PlanRequest(
+            batch=b, seq=s, attention_scores=self.rt.attention_scores,
+            heterogeneity_aware=self.rt.heterogeneity_aware)
+        key = (request, self.rt.fleet.signature())
+        if key not in self._priced:
+            stats: dict = {}
+            self._priced[key] = price_request(
+                self.rt, request, loss_chunk=self.chunks["loss_chunk"],
+                stats=stats)
+            self._last_cold_solves = stats.get("cold_solves", 0)
+        else:
+            self._last_cold_solves = 0
+        return self._priced[key]
+
+
+def make_fleet_train_step(runtime, cfg=None, opt_cfg=None, **opts):
+    """Factory mirroring ``launch.steps.make_train_step``: returns
+    ``step(params, opt_state, batch, *, fail_ids=(), fail_at_gemm=0)``
+    bound to a fresh :class:`FleetTrainSession` (exposed as
+    ``step.session``)."""
+    session = FleetTrainSession(runtime, cfg=cfg, opt_cfg=opt_cfg, **opts)
+
+    def train_step(params, opt_state, batch, *, fail_ids=(),
+                   fail_at_gemm: int = 0):
+        return session.step(params, opt_state, batch, fail_ids=fail_ids,
+                            fail_at_gemm=fail_at_gemm)
+
+    train_step.session = session
+    return train_step

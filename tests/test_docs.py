@@ -1,0 +1,38 @@
+"""Docs-health regression coverage: the link checker runs in tier-1 (docs
+can't merge with broken intra-repo links); the full example smoke suite is
+nightly (`slow`) and also runs as the CI ``docs-health`` job on every
+push."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+CHECKER = os.path.join(REPO, "scripts", "check_docs.py")
+
+
+def _run(args, timeout):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return subprocess.run([sys.executable, CHECKER, *args], cwd=REPO,
+                          env=env, capture_output=True, text=True,
+                          timeout=timeout)
+
+
+def test_required_docs_exist():
+    for rel in ("README.md", "docs/TRAINING.md", "docs/API.md",
+                "docs/PERF.md", "docs/SIMULATION.md"):
+        assert os.path.exists(os.path.join(REPO, rel)), rel
+
+
+def test_markdown_links_resolve():
+    proc = _run(["--links-only"], timeout=60)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+@pytest.mark.slow
+def test_examples_run_in_smoke_mode():
+    proc = _run(["--examples-only"], timeout=1800)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
