@@ -10,6 +10,13 @@ Tracks the discrete-event timeline engine too: one eventful simulation
 (fail + slowdown + jitter) per run, recording simulated events/sec and the
 deterministic event-vs-analytic agreement.
 
+Two end-to-end fleet rows ride along: ``fleet_train`` (one PS-centric
+training step, loss parity vs the monolithic jitted step) and
+``fleet_serve`` (1000 Poisson request streams decoded through the serving
+engine under continuous batching with a mid-run device failure —
+tokens/sec, p50/p99 token latency measured + engine-priced, plan-cache hit
+rate; docs/SERVING.md).
+
 Run:  PYTHONPATH=src python -m benchmarks.run --core
 """
 from __future__ import annotations
@@ -66,6 +73,7 @@ def bench_core(matrix=MATRIX, include_kernels: bool = False) -> dict:
         "event_engine": bench_event_engine(),
         "executor": bench_executor(),
         "fleet_train": bench_fleet_train(),
+        "fleet_serve": bench_fleet_serve(),
     }
     if include_kernels:
         payload["kernels"] = bench_kernel_rows()
@@ -186,6 +194,51 @@ def bench_fleet_train(n_devices: int = 16, batch: int = 2,
     }
 
 
+def bench_fleet_serve(n_devices: int = 16, n_streams: int = 1000,
+                      slots: int = 64) -> dict:
+    """Request-level serving latency engine
+    (``CleaveRuntime.serve_session``): >=1000 Poisson-arrival request
+    streams decoded through the fleet under continuous batching — paged KV
+    on the PS, every projection GEMM fleet-executed through the warm plan
+    cache — with a device failure injected mid-run.  Tracks tokens/sec and
+    p50/p99 per-token latency in both clocks (measured wall and
+    engine-priced makespans) plus the decode plan-cache hit rate."""
+    import jax
+
+    from repro.api import CleaveRuntime, Fleet
+    from repro.configs.base import get_config
+    from repro.models import model as M
+    from repro.serving import run_load
+
+    cfg = get_config("llama3-8b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rt = CleaveRuntime(arch=cfg, fleet=Fleet.sample(n_devices, seed=0))
+    sess = rt.serve_session(params, slots=slots, page_size=4, max_len=8,
+                            seed=0)
+    t0 = time.perf_counter()
+    rep = run_load(sess, n_streams=n_streams, rate=200.0, prompt_len=4,
+                   max_new=2, seed=0, fail_ids=[3], fail_at_step=5)
+    wall = time.perf_counter() - t0
+    return {
+        "arch": cfg.name + "-reduced", "devices": n_devices,
+        "streams": n_streams, "slots": slots,
+        "n_tokens": rep.n_tokens, "n_steps": rep.n_steps,
+        "bench_wall_s": round(wall, 2),
+        "tokens_per_sec": round(rep.tokens_per_sec, 1),
+        "tokens_per_sec_priced": round(rep.tokens_per_sec_priced, 1),
+        "token_lat_p50_s": round(rep.token_lat_p50, 4),
+        "token_lat_p99_s": round(rep.token_lat_p99, 4),
+        "token_lat_p50_priced_s": round(rep.token_lat_p50_priced, 4),
+        "token_lat_p99_priced_s": round(rep.token_lat_p99_priced, 4),
+        "e2e_p50_s": round(rep.e2e_p50, 4),
+        "e2e_p99_s": round(rep.e2e_p99, 4),
+        "plan_cache_hit_rate": rep.plan_cache_hit_rate,
+        "n_recovered": rep.n_recovered,
+        "failed_mid_run": list(rep.failed_ids),
+        "drained_ok": bool(rep.n_requests == n_streams),
+    }
+
+
 def bench_kernel_rows() -> list:
     """The kernel microbench rows (``benchmarks.kernels_bench``) folded
     into the core payload — the nightly job tracks kernel + executor
@@ -267,6 +320,11 @@ def check_against_baseline(baseline: dict, fresh: dict,
     if f_x is not None:
         ok = b_x is None or f_x >= b_x / tolerance
         out.append(("executor.min_jax_vs_numpy_x", b_x, f_x, ok))
+    b_ts = baseline.get("fleet_serve", {}).get("tokens_per_sec")
+    f_ts = fresh.get("fleet_serve", {}).get("tokens_per_sec")
+    if f_ts is not None:
+        ok = b_ts is None or f_ts >= b_ts / tolerance
+        out.append(("fleet_serve.tokens_per_sec", b_ts, f_ts, ok))
     return out
 
 
@@ -328,6 +386,14 @@ def main(out_path: str = "BENCH_core.json",
           f"{ft['step_wall_s']}s/step {ft['gemms_per_step']} gemms "
           f"({ft['gemms_per_sec']}/s) parity "
           f"{'OK' if ft['parity_ok'] else 'FAIL vs monolithic step'}")
+    fs = payload["fleet_serve"]
+    print(f"fleet-serve/{fs['arch']}/D={fs['devices']}: "
+          f"{fs['streams']} streams {fs['n_tokens']} toks | "
+          f"{fs['tokens_per_sec']} tok/s measured "
+          f"({fs['tokens_per_sec_priced']} priced) | token p50/p99 "
+          f"{fs['token_lat_p50_s']}/{fs['token_lat_p99_s']}s | cache "
+          f"{fs['plan_cache_hit_rate']:.0%} | drain "
+          f"{'OK' if fs['drained_ok'] else 'FAIL: undrained requests'}")
     for k in payload.get("kernels", []):
         print(f"{k['name']}: {k['us_per_call']}us")
     cache_ok = payload["plan_cache_ok"]

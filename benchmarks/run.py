@@ -5,11 +5,13 @@ Usage:
     PYTHONPATH=src python -m benchmarks.run [--only substring] [--skip-kernels]
     PYTHONPATH=src python -m benchmarks.run --core   # perf tracker:
         writes BENCH_core.json (batch-time + plan-solve wall-clock matrix,
-        asserts plan-cache reuse >=10x) and exits.
+        fleet train-step + serving rows, asserts plan-cache reuse >=10x)
+        and exits.
     PYTHONPATH=src python -m benchmarks.run --check  # regression gate:
         fresh run vs the committed BENCH_core.json (plan_solve_cold_s,
-        events_per_sec, executor min_jax_vs_numpy_x; 1.25x tolerance),
-        non-zero exit on regression.  Run by the nightly CI job.
+        events_per_sec, executor min_jax_vs_numpy_x, fleet_serve
+        tokens_per_sec; 1.25x tolerance), non-zero exit on regression.
+        Run by the nightly CI job.
 """
 from __future__ import annotations
 
@@ -34,10 +36,11 @@ def main() -> None:
     ap.add_argument("--check", action="store_true",
                     help="regression gate: run a fresh core bench and "
                          "compare plan_solve_cold_s / events_per_sec / "
-                         "executor min_jax_vs_numpy_x against the "
-                         "committed BENCH_core.json (1.25x tolerance); "
-                         "exits non-zero on regression without touching "
-                         "the baseline file")
+                         "executor min_jax_vs_numpy_x / fleet_serve "
+                         "tokens_per_sec against the committed "
+                         "BENCH_core.json (1.25x tolerance); exits "
+                         "non-zero on regression without touching the "
+                         "baseline file")
     ap.add_argument("--check-tolerance", type=float, default=None,
                     help="override the --check regression tolerance")
     args = ap.parse_args()

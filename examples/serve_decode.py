@@ -1,44 +1,35 @@
-"""Serving example: prefill a prompt then decode tokens with the KV cache,
-for a dense and a recurrent (RWKV) architecture — demonstrating the
-serve_step that the decode_32k / long_500k dry-run shapes lower.
+"""Fleet-backed serving example: requests stream into a
+``CleaveRuntime.serve_session`` — paged KV cache on the parameter server,
+continuous batching over fixed decode slots, and every projection GEMM
+(q/k/v/out, SwiGLU, lm_head) coalesced across the batch and executed on the
+edge fleet, with a device failure injected (and recovered) mid-decode.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py
 """
-import time
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.api import CleaveRuntime, Fleet
 from repro.configs.base import get_config
-from repro.models import model as M
 
-for arch in ("llama3-8b", "rwkv6-7b"):
-    cfg = get_config(arch).reduced()
-    params = M.init_params(cfg, jax.random.PRNGKey(0))
-    B, prompt_len, gen_len = 2, 12, 12
-    prompt = jax.random.randint(jax.random.PRNGKey(1), (B, prompt_len), 0,
-                                cfg.vocab_size)
+rt = CleaveRuntime(arch=get_config("llama3-8b").reduced(),
+                   fleet=Fleet.sample(8, seed=0), accounting="broadcast")
 
-    logits, cache = M.prefill(cfg, params, {"tokens": prompt})
-    step = jax.jit(lambda p, c, t: M.decode_step(cfg, p, c, t))
+sess = rt.serve_session(slots=4, page_size=4, max_len=24, seed=0)
 
-    # grow the kv cache for generation (dense families)
-    if "k" in cache:
-        full = M.init_cache(cfg, B, prompt_len + gen_len)
-        full["k"] = full["k"].at[:, :, :prompt_len].set(cache["k"])
-        full["v"] = full["v"].at[:, :, :prompt_len].set(cache["v"])
-        full["pos"] = cache["pos"]
-        cache = full
+# six requests with staggered arrivals: continuous batching admits each one
+# as soon as a slot and its page budget free up
+rng = np.random.default_rng(1)
+for i in range(6):
+    prompt = rng.integers(0, rt.cfg.vocab_size, size=8).astype(np.int32)
+    sess.submit(prompt, max_new=6, arrival=0.5 * i)
 
-    tok = jnp.argmax(logits[:, -1:, :cfg.vocab_size], axis=-1)
-    out = [np.asarray(tok)]
-    t0 = time.perf_counter()
-    for _ in range(gen_len - 1):
-        logits, cache = step(params, cache, tok.astype(jnp.int32))
-        tok = jnp.argmax(logits[:, :, :cfg.vocab_size], axis=-1)
-        out.append(np.asarray(tok))
-    dt = (time.perf_counter() - t0) / (gen_len - 1)
-    gen = np.concatenate(out, axis=1)
-    print(f"{arch:12s} greedy continuation (batch 0): {gen[0].tolist()}  "
-          f"({dt * 1000:.1f} ms/token on CPU)")
+# decode until drained; device 3 fails during the 2nd step's in-flight GEMM
+# (churn.recover keeps the output exact — no request's KV is corrupted)
+report = sess.run(fail_ids=[3], fail_at_step=2)
+
+print(report.log_line())
+print(f"pages: {report.cache.n_used}/{report.cache.n_pages} in use at end, "
+      f"peak {report.cache.peak_pages_used}")
+for r in sess.batcher.finished[:3]:
+    print(f"  req{r.rid}: arrived {r.arrival:.2f}s -> finished "
+          f"{r.finish_time:.2f}s (priced), tokens {r.tokens}")

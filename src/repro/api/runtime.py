@@ -495,6 +495,33 @@ class CleaveRuntime:
         return session.step(params, opt_state, batch, fail_ids=fail_ids,
                             fail_at_gemm=fail_at_gemm)
 
+    # ---------------------------------------------------------------- serve --
+
+    def serve_session(self, params=None, *, slots: int = 8,
+                      page_size: int = 16, max_len: int = 64,
+                      kv_int8: bool = False, backend: str = "numpy",
+                      kernel: str = "auto", dtype_policy=None,
+                      verify: bool = True, check_paged_read: bool = False,
+                      n_pages: Optional[int] = None, seed: int = 0):
+        """A fleet-backed decode serving session
+        (:class:`repro.serving.ServeSession`): continuous batching over
+        ``slots`` fixed batch lanes, prompt/generation K/V in a PS-hosted
+        paged cache (``page_size``-token pages, reserved per request at
+        admission, ``kv_int8`` for int8 + f16-scale storage), and every
+        per-token projection GEMM — attn q/k/v/out or MLA latent
+        projections, SwiGLU, lm_head — coalesced across the batch and
+        executed on this runtime's fleet (plan cache, Freivalds, churn
+        recovery).  ``submit()`` requests, ``step()``/``run()`` to decode;
+        the report prices every step with ``sim/engine.price_plan`` next to
+        measured wall time (docs/SERVING.md)."""
+        from repro.serving import ServeSession
+        return ServeSession(self, params, slots=slots, page_size=page_size,
+                            max_len=max_len, kv_int8=kv_int8,
+                            backend=backend, kernel=kernel,
+                            dtype_policy=dtype_policy, verify=verify,
+                            check_paged_read=check_paged_read,
+                            n_pages=n_pages, seed=seed)
+
     # -------------------------------------------------------------- recover --
 
     def on_failure(self, ids: Sequence[int]) -> ChurnReport:

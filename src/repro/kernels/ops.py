@@ -405,6 +405,22 @@ def gqa_flash_decode(q, k, v, valid, *, bs=512):
     return out.reshape(B, H, 1, D).transpose(0, 2, 1, 3)
 
 
+def gqa_flash_decode_paged(q, k_pool, v_pool, page_table, lengths):
+    """Paged-KV single-token GQA decode: attention reads the serving page
+    pools in place through per-request page tables (no contiguous gather).
+    q: (B,1,H,D); k_pool/v_pool: (P,page,K,D) — one layer's pools from
+    ``serving.PagedKVCache``; page_table: (B,maxp) int32; lengths: (B,)
+    int32 occupancy.  Returns (B,1,H,D)."""
+    from repro.kernels import decode_attention as _dec
+    B, _, H, D = q.shape
+    K = k_pool.shape[2]
+    G = H // K
+    qf = q.reshape(B, K, G, D)
+    out = _dec.flash_decode_paged(qf, k_pool, v_pool, page_table, lengths,
+                                  interpret=_interpret())
+    return out.reshape(B, 1, H, D)
+
+
 @functools.partial(jax.jit, static_argnames=("chunk",))
 def wkv6(r, k, v, w, u, *, chunk=32):
     """RWKV-6 recurrence. r,k,v,w: (B,S,H,hd); u: (H,hd) ->

@@ -2,9 +2,16 @@
 KV cache (greedy or temperature sampling).  CPU-scale runner for the same
 ``serve_step`` the decode dry-run shapes lower.
 
+``--edge-plan N`` additionally drives the **fleet decode path**: the same
+prompts run through ``CleaveRuntime.serve_session`` — paged KV on the PS,
+every projection GEMM executed on an N-device edge fleet — with the
+planner's projection and the engine-priced per-token latency printed as the
+predicted column next to the measured one (docs/SERVING.md).
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
-      --batch 4 --prompt-len 16 --gen 32 [--kv-int8]
+      --batch 4 --prompt-len 16 --gen 32 [--kv-int8] [--edge-plan 16]
+  (``--no-reduced`` selects the full-size config.)
 """
 from __future__ import annotations
 
@@ -15,7 +22,10 @@ import time
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b")
-    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="reduced config (default; --no-reduced for "
+                         "full size)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
@@ -23,26 +33,13 @@ def main(argv=None):
     ap.add_argument("--kv-int8", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--edge-plan", type=int, default=0, metavar="N",
-                    help="plan the forward-only (serve) GEMM DAG over an "
-                         "N-device edge fleet via CleaveRuntime and print "
-                         "the projected per-batch latency")
+                    help="plan AND execute the decode through an N-device "
+                         "edge fleet (CleaveRuntime.serve_session): paged "
+                         "KV on the PS, projection GEMMs on the fleet, "
+                         "engine-priced latency as the predicted column")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="edge path: tokens per KV page")
     args = ap.parse_args(argv)
-
-    if args.edge_plan > 0:
-        from repro.api import CleaveRuntime, Fleet, PlanRequest
-        rt_cfg_name = args.arch
-        rt = CleaveRuntime(arch=rt_cfg_name,
-                           fleet=Fleet.sample(args.edge_plan,
-                                              seed=args.seed),
-                           accounting="broadcast")
-        req = PlanRequest(batch=args.batch,
-                          seq=args.prompt_len + args.gen,
-                          backward=False)   # serve: forward pass only
-        rep = rt.plan(request=req)
-        print(f"edge serve plan ({args.edge_plan} devices): "
-              f"batch_time={rep.batch_time:.1f}s "
-              f"comm/dev={rep.per_device_comm / 1e6:.0f}MB "
-              f"mem/dev={rep.per_device_mem / 1e6:.0f}MB")
 
     import jax
     import jax.numpy as jnp
@@ -112,6 +109,43 @@ def main(argv=None):
           f"decode={dt * 1000:.1f}ms/tok kv_int8={args.kv_int8}")
     for b in range(min(B, 2)):
         print(f"  req{b}: {gen[b, :24].tolist()}")
+
+    if args.edge_plan > 0:
+        from repro.api import CleaveRuntime, Fleet, PlanRequest
+        rt = CleaveRuntime(arch=cfg,
+                           fleet=Fleet.sample(args.edge_plan,
+                                              seed=args.seed),
+                           accounting="broadcast")
+        # predicted column #1: the forward-only batch plan over the fleet
+        rep = rt.plan(request=PlanRequest(batch=B, seq=P + G,
+                                          backward=False))
+        print(f"edge serve plan ({args.edge_plan} devices): "
+              f"batch_time={rep.batch_time:.1f}s "
+              f"comm/dev={rep.per_device_comm / 1e6:.0f}MB "
+              f"mem/dev={rep.per_device_mem / 1e6:.0f}MB")
+        # and now execute: same prompts, same params, decode through the
+        # fleet under continuous batching
+        sess = rt.serve_session(params, slots=B,
+                                page_size=args.page_size,
+                                max_len=P + G, kv_int8=args.kv_int8,
+                                seed=args.seed)
+        pn = np.asarray(prompts)
+        for b in range(B):
+            sess.submit(pn[b], max_new=G)
+        srep = sess.run()
+        print(f"edge serve executed: {srep.n_tokens} toks in "
+              f"{srep.n_steps} steps | measured "
+              f"{srep.wall_time / max(srep.n_tokens, 1) * 1e3:.1f}ms/tok "
+              f"({srep.tokens_per_sec:.1f} tok/s) | predicted "
+              f"{srep.virtual_time / max(srep.n_tokens, 1) * 1e3:.1f}ms/tok "
+              f"({srep.tokens_per_sec_priced:.1f} tok/s) | plan cache "
+              f"{srep.plan_cache_hit_rate:.0%}")
+        if args.temperature <= 0:
+            fleet_toks = [r.tokens for r in sess.batcher.finished]
+            mono_toks = [gen[b, :G].tolist() for b in range(B)]
+            match = sorted(map(tuple, fleet_toks)) \
+                == sorted(map(tuple, mono_toks))
+            print(f"  greedy tokens match monolithic: {match}")
     return 0
 
 

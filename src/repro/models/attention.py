@@ -109,7 +109,9 @@ def decode_attention(q, k_cache, v_cache, valid, prefix_kv=None):
 
     q: (B,1,H,Dk); k_cache: (B,Smax,K,Dk); v_cache: (B,Smax,K,Dv);
     valid: (Smax,) bool — which cache slots participate (handles both
-    growing caches and full ring buffers).
+    growing caches and full ring buffers) — or (B,Smax) for per-request
+    occupancy (the continuous-batching serving path, where every batch
+    slot sits at its own position).
 
     Under a mesh with the cache sequence dim sharded this dispatches to an
     explicit shard_map flash-decode (partial scores per shard, pmax/psum
@@ -117,7 +119,8 @@ def decode_attention(q, k_cache, v_cache, valid, prefix_kv=None):
     and the mul-reduce form never materializes an f32 cache copy."""
     from repro.parallel.sharding import current_rules
     rules = current_rules()
-    if (prefix_kv is None and rules is not None and rules.mesh is not None
+    if (prefix_kv is None and valid.ndim == 1 and rules is not None
+            and rules.mesh is not None
             and "model" in rules.mesh.axis_names):
         mesh = rules.mesh
         batch_axes = tuple(a for a in ("pod", "data")
@@ -140,7 +143,9 @@ def decode_attention(q, k_cache, v_cache, valid, prefix_kv=None):
     qc = (q.reshape(B, K, G, Dk) * scale).astype(k_cache.dtype)
     s = jnp.einsum("bkgd,bskd->bkgs", qc, k_cache,
                    preferred_element_type=jnp.float32)
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    vmask = valid[:, None, None, :] if valid.ndim == 2 \
+        else valid[None, None, None, :]
+    s = jnp.where(vmask, s, NEG_INF)
     if prefix_kv is not None:
         pk, pv = prefix_kv
         sp = jnp.einsum("bkgd,bskd->bkgs", qc, pk.astype(k_cache.dtype),
@@ -302,21 +307,34 @@ def project_cross_kv(cfg, p, enc_x):
     return k, v
 
 
+def _decode_positions(cfg, pos, B):
+    """RoPE positions for the incoming token: scalar ``pos`` broadcasts to
+    the whole batch (the uniform monolithic decode), a (B,) vector gives
+    every batch slot its own absolute position (continuous batching)."""
+    pos = pos.astype(jnp.int32)
+    if jnp.ndim(pos) == 1:
+        base = pos.reshape(B, 1)
+    else:
+        base = jnp.broadcast_to(pos.reshape(1, 1), (B, 1))
+    if cfg.m_rope:
+        return jnp.broadcast_to(base[..., None], (B, 1, 3))
+    return base
+
+
 def attention_decode(cfg, p, x, pos, cache_k, cache_v, slot, valid,
                      cross_kv=None):
     """One-token decode. x: (B,1,d); cache_k/v: (B,Smax,K,hd) — the layer's
     cache slice (read).  Returns (out, k_new, v_new) where k_new/v_new are
     the (B,1,K,hd) new-token entries: the caller writes them back with one
     small dynamic_update_slice (never rewriting the full cache — a 100x
-    write-traffic difference found via the dry-run HLO analyzer)."""
+    write-traffic difference found via the dry-run HLO analyzer).
+
+    ``pos``/``slot`` may be scalars (uniform batch) or (B,) vectors with a
+    (B,Smax) ``valid`` mask — the per-request serving layout."""
     B = x.shape[0]
     q, k, v = _project_qkv(cfg, p, x)
     if cross_kv is None:
-        positions = jnp.broadcast_to(
-            pos.astype(jnp.int32).reshape(1, 1),
-            (B, 1)) if not cfg.m_rope else jnp.broadcast_to(
-                pos.astype(jnp.int32).reshape(1, 1, 1), (B, 1, 3))
-        q, k = _rope_qk(cfg, q, k, positions)
+        q, k = _rope_qk(cfg, q, k, _decode_positions(cfg, pos, B))
         cache_k = _write_slot(cache_k, k, slot)
         cache_v = _write_slot(cache_v, v, slot)
         out = decode_attention(q, cache_k, cache_v, valid,
@@ -327,11 +345,16 @@ def attention_decode(cfg, p, x, pos, cache_k, cache_v, slot, valid,
         out = decode_attention(q, ck, cv, valid_c)
         k = v = None
     out = out.reshape(B, 1, -1)
-    return out @ constrain(p["wo"], "w_out", "w_in_use"), k, v
+    return L.pdot(out, constrain(p["wo"], "w_out", "w_in_use")), k, v
 
 
 def _write_slot(cache, kv, slot):
-    """cache: (B,Smax,K,hd); kv: (B,1,K,hd); write at sequence index slot."""
+    """cache: (B,Smax,K,hd); kv: (B,1,K,hd); write at sequence index slot
+    (scalar: same slot for the whole batch; (B,) vector: per-slot scatter)."""
+    if jnp.ndim(slot) == 1:
+        B = cache.shape[0]
+        return cache.at[jnp.arange(B), slot].set(
+            kv[:, 0].astype(cache.dtype))
     return jax.lax.dynamic_update_slice(
         cache, kv.astype(cache.dtype), (0, slot, 0, 0))
 
@@ -412,16 +435,23 @@ def mla_decode(cfg, p, x, pos, cache_ckv, cache_kpe, slot, valid):
     B = x.shape[0]
     H, hd, rd, r, vd = (cfg.n_heads, cfg.head_dim, cfg.rope_head_dim,
                         cfg.kv_lora_rank, cfg.v_dim)
-    positions = jnp.broadcast_to(pos.astype(jnp.int32).reshape(1, 1), (B, 1))
+    positions = _decode_positions(cfg, pos, B)
     q_nope, q_pe = _mla_q(cfg, p, x)
     q_pe = L.apply_rope(q_pe, positions, cfg.rope_theta)       # (B,1,H,rd)
     c_kv_new, k_pe_new = _mla_ckv(cfg, p, x, positions)
     # local (read-slice) update for this step's attention; the caller writes
     # back only the (B,1,·) new-token entries.
-    cache_ckv = jax.lax.dynamic_update_slice(
-        cache_ckv, c_kv_new.astype(cache_ckv.dtype), (0, slot, 0))
-    cache_kpe = jax.lax.dynamic_update_slice(
-        cache_kpe, k_pe_new.astype(cache_kpe.dtype), (0, slot, 0))
+    if jnp.ndim(slot) == 1:
+        bidx = jnp.arange(B)
+        cache_ckv = cache_ckv.at[bidx, slot].set(
+            c_kv_new[:, 0].astype(cache_ckv.dtype))
+        cache_kpe = cache_kpe.at[bidx, slot].set(
+            k_pe_new[:, 0].astype(cache_kpe.dtype))
+    else:
+        cache_ckv = jax.lax.dynamic_update_slice(
+            cache_ckv, c_kv_new.astype(cache_ckv.dtype), (0, slot, 0))
+        cache_kpe = jax.lax.dynamic_update_slice(
+            cache_kpe, k_pe_new.astype(cache_kpe.dtype), (0, slot, 0))
     w_uk = p["w_uk"].reshape(r, H, hd)
     q_c = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk,
                      preferred_element_type=jnp.float32)       # (B,1,H,r)
@@ -431,7 +461,9 @@ def mla_decode(cfg, p, x, pos, cache_ckv, cache_kpe, slot, valid):
                     preferred_element_type=jnp.float32)
          + jnp.einsum("bqhd,bsd->bhqs", q_pe.astype(dt), cache_kpe,
                       preferred_element_type=jnp.float32)) * scale
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    vmask = valid[:, None, None, :] if valid.ndim == 2 \
+        else valid[None, None, None, :]
+    s = jnp.where(vmask, s, NEG_INF)
     m = jnp.max(s, axis=-1, keepdims=True)
     pw = jnp.exp(s - m)
     pw = pw / jnp.sum(pw, axis=-1, keepdims=True)
@@ -440,6 +472,6 @@ def mla_decode(cfg, p, x, pos, cache_ckv, cache_kpe, slot, valid):
     w_uv = p["w_uv"].reshape(r, H, vd)
     out = jnp.einsum("bqhr,rhv->bqhv", ctx, w_uv.astype(jnp.float32))
     out = out.reshape(B, 1, H * vd).astype(x.dtype)
-    return (out @ constrain(p["wo"], "w_out", "w_in_use"),
+    return (L.pdot(out, constrain(p["wo"], "w_out", "w_in_use")),
             c_kv_new.astype(cache_ckv.dtype),
             k_pe_new.astype(cache_kpe.dtype))

@@ -332,13 +332,24 @@ def _kv_quantize(x):
 
 # ------------------------------------------------------------- decode step --
 
-def decode_step(cfg, params, cache, tokens, *, window=0):
+def decode_step(cfg, params, cache, tokens, *, window=0, scan_layers=True):
     """One-token decode. tokens: (B,1). cache["pos"] is the absolute position
     of the incoming token; slot = pos % cache_len (ring buffer when the cache
-    is shorter than the context — the sliding-window variant)."""
+    is shorter than the context — the sliding-window variant).
+
+    ``cache["pos"]`` may also be a (B,) vector — each batch slot then decodes
+    at its own absolute position with its own occupancy mask (the
+    continuous-batching serving layout, where admissions and retirements give
+    every slot an independent history length).
+
+    ``scan_layers=False`` unrolls the layer loop in Python (per-layer param
+    slices, no ``lax.scan``) — the fleet serving path uses it so the
+    ``pdot``/``fleet_dot`` host callbacks never sit inside compiled control
+    flow; same values as the scan."""
     B = tokens.shape[0]
     x = L.embed_tokens(params["embed"], tokens, cfg)
     pos = cache["pos"]
+    vec_pos = jnp.ndim(pos) == 1
     cache = constrain_cache(cache)
 
     cache_len = None
@@ -348,7 +359,10 @@ def decode_step(cfg, params, cache, tokens, *, window=0):
     slot = pos % cache_len if cache_len is not None else 0
     if cache_len is not None:
         n_valid = jnp.minimum(pos + 1, cache_len)
-        valid = jnp.arange(cache_len) < n_valid
+        if vec_pos:
+            valid = jnp.arange(cache_len)[None, :] < n_valid[:, None]
+        else:
+            valid = jnp.arange(cache_len) < n_valid
     else:
         valid = None
 
@@ -422,7 +436,16 @@ def decode_step(cfg, params, cache, tokens, *, window=0):
     if cfg.enc_dec:
         scanned["cross"] = params["cross"]
 
-    x, new_stacked = jax.lax.scan(body, x, scanned)
+    if scan_layers:
+        x, new_stacked = jax.lax.scan(body, x, scanned)
+    else:
+        news = []
+        for i in range(cfg.n_layers):
+            sl = jax.tree.map(lambda t: t[i], scanned)
+            x, new_i = body(x, sl)
+            news.append(new_i)
+        new_stacked = {k: jnp.stack([n[k] for n in news])
+                       for k in (news[0] if news else {})}
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = L.lm_logits(params["head"], params["embed"], x, cfg)
     logits = logits.astype(jnp.float32) + _vocab_mask(cfg)
@@ -436,9 +459,15 @@ def decode_step(cfg, params, cache, tokens, *, window=0):
     for src, dst in writes.items():
         if src in new_stacked:
             upd = new_stacked[src].astype(cache[dst].dtype)
-            start = (0, 0, slot) + (0,) * (cache[dst].ndim - 3)
-            new_cache[dst] = jax.lax.dynamic_update_slice(
-                cache[dst], upd, start)
+            if vec_pos:
+                # per-slot scatter: each batch slot writes its own sequence
+                # index (continuous batching)
+                new_cache[dst] = cache[dst].at[:, jnp.arange(B), slot].set(
+                    upd[:, :, 0])
+            else:
+                start = (0, 0, slot) + (0,) * (cache[dst].ndim - 3)
+                new_cache[dst] = jax.lax.dynamic_update_slice(
+                    cache[dst], upd, start)
     # recurrent states are replaced wholesale (they are small)
     for nm in ("wkv_state", "tm_prev", "cm_prev", "ssm_h", "ssm_conv"):
         if nm in new_stacked:

@@ -1,0 +1,17 @@
+"""Fleet-backed decode serving: paged KV cache on the PS, continuous
+batching, projection GEMMs on the device fleet, request-level latency
+accounting (docs/SERVING.md).
+
+Entry point: :meth:`repro.api.CleaveRuntime.serve_session`.
+"""
+from repro.serving.batcher import ContinuousBatcher, Request
+from repro.serving.decode_session import (ServeReport, ServeSession,
+                                          ServeStepReport)
+from repro.serving.kv_cache import CacheStats, PagedKVCache, quantize_kv
+from repro.serving.loadgen import generate_requests, run_load
+
+__all__ = [
+    "ContinuousBatcher", "Request", "ServeReport", "ServeSession",
+    "ServeStepReport", "CacheStats", "PagedKVCache", "quantize_kv",
+    "generate_requests", "run_load",
+]

@@ -23,7 +23,7 @@ def _run(args, timeout):
 
 def test_required_docs_exist():
     for rel in ("README.md", "docs/TRAINING.md", "docs/API.md",
-                "docs/PERF.md", "docs/SIMULATION.md"):
+                "docs/PERF.md", "docs/SIMULATION.md", "docs/SERVING.md"):
         assert os.path.exists(os.path.join(REPO, rel)), rel
 
 

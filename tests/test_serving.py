@@ -1,0 +1,219 @@
+"""Fleet-backed decode serving: paged KV cache, continuous batching, and
+token-for-token parity with the monolithic decode path — including device
+failures injected mid-generation."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import CleaveRuntime, Fleet
+from repro.configs.base import get_config
+from repro.models import model as M
+from repro.serving import PagedKVCache, run_load
+
+
+def make_session(arch="llama3-8b", n_dev=8, seed=0, **kw):
+    cfg = get_config(arch).reduced()
+    if cfg.moe:
+        # parity across batch compositions needs drop-free routing
+        cfg = dataclasses.replace(cfg, capacity_factor=32.0)
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    rt = CleaveRuntime(arch=cfg, fleet=Fleet.sample(n_dev, seed=seed))
+    kw.setdefault("slots", 3)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_len", 16)
+    return rt.serve_session(params, **kw), cfg, params
+
+
+def monolithic_greedy(cfg, params, prompt, n_new, *, kv_int8=False,
+                      cache_len=16):
+    """Reference: token-by-token jitted decode from an empty cache — the
+    exact computation the serving path distributes."""
+    step = jax.jit(lambda p, c, t: M.decode_step(cfg, p, c, t))
+    cache = M.init_cache(cfg, 1, cache_len, kv_quant=kv_int8)
+    lg = None
+    for t in range(len(prompt)):
+        lg, cache = step(params, cache, jnp.asarray([[prompt[t]]]))
+    toks = []
+    for _ in range(n_new):
+        tok = int(jnp.argmax(lg[0, 0, :cfg.vocab_size]))
+        toks.append(tok)
+        lg, cache = step(params, cache, jnp.asarray([[tok]]))
+    return toks
+
+
+def submit_and_check(sess, cfg, params, prompts, max_new, run_kw=None,
+                     kv_int8=False):
+    for p in prompts:
+        sess.submit(p, max_new=max_new)
+    rep = sess.run(**(run_kw or {}))
+    assert rep.n_requests == len(prompts)
+    by_rid = {r.rid: r.tokens for r in sess.batcher.finished}
+    for i, p in enumerate(prompts):
+        want = monolithic_greedy(cfg, params, p, max_new, kv_int8=kv_int8)
+        assert by_rid[i] == want, (i, by_rid[i], want)
+    return rep
+
+
+def rand_prompts(cfg, n, length, seed=1):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=length).astype(np.int32)
+            for _ in range(n)]
+
+
+# ------------------------------------------------------------- token parity --
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_fleet_decode_token_parity(backend):
+    """Greedy decode through the fleet (continuous batching, paged KV) is
+    token-identical to the monolithic decode path, on both executor
+    backends."""
+    n = 2 if backend == "jax" else 4
+    sess, cfg, params = make_session(n_dev=4, backend=backend)
+    rep = submit_and_check(sess, cfg, params, rand_prompts(cfg, n, 5),
+                           max_new=4)
+    assert rep.n_tokens == n * 4
+    assert rep.plan_cache_hit_rate > 0.5        # fixed shapes → warm plans
+
+
+def test_fleet_decode_parity_with_failure():
+    """A device failing mid-generation (in-flight GEMM) recovers via
+    churn.recover without corrupting any request's KV state: tokens stay
+    identical, later steps plan over the survivors."""
+    sess, cfg, params = make_session(n_dev=8)
+    rep = submit_and_check(
+        sess, cfg, params, rand_prompts(cfg, 4, 5), max_new=4,
+        run_kw=dict(fail_ids=[2], fail_at_step=1, max_steps=50))
+    assert rep.failed_ids == (2,)
+    assert rep.n_recovered > 0
+    assert len(sess.rt.fleet) == 7              # evicted for good
+    assert all(r.verified for r in sess.step_reports)
+
+
+def test_mla_fleet_decode_parity():
+    """MLA (compressed-KV) serving: ckv/kpe pools page the latent cache."""
+    sess, cfg, params = make_session(arch="deepseek-v2-236b", n_dev=4,
+                                     slots=2)
+    submit_and_check(sess, cfg, params, rand_prompts(cfg, 2, 4), max_new=3)
+    assert set(sess.kv.pools) == {"ckv", "kpe"}
+
+
+def test_staggered_admission_parity():
+    """More requests than slots with staggered arrivals: retirement frees
+    slots/pages mid-run, later admissions decode at their own positions —
+    every request still token-identical."""
+    sess, cfg, params = make_session(slots=2, n_dev=6)
+    prompts = rand_prompts(cfg, 5, 5)
+    for i, p in enumerate(prompts):
+        sess.submit(p, max_new=3, arrival=0.1 * i)
+    rep = sess.run()
+    assert rep.n_requests == 5
+    assert sess.batcher.n_admitted == 5
+    by_rid = {r.rid: r.tokens for r in sess.batcher.finished}
+    for i, p in enumerate(prompts):
+        assert by_rid[i] == monolithic_greedy(cfg, params, p, 3)
+    # with 2 slots and 5 requests the run must have retired mid-run
+    assert any(s.n_retired and s.n_admitted for s in sess.step_reports) \
+        or rep.n_steps > 6
+
+
+def test_kv_int8_paged_parity():
+    """int8 paged KV (quantize-on-write, f16 scales) matches the monolithic
+    --kv-int8 decode token for token."""
+    sess, cfg, params = make_session(kv_int8=True, n_dev=4)
+    submit_and_check(sess, cfg, params, rand_prompts(cfg, 3, 5),
+                     max_new=3, kv_int8=True)
+    assert sess.kv.pools["k"].dtype == np.int8
+    assert sess.kv.pools["k_scale"].dtype == np.float16
+
+
+# --------------------------------------------------------------- paged cache --
+
+def test_paged_cache_alloc_free():
+    cfg = get_config("llama3-8b").reduced()
+    kv = PagedKVCache(cfg, n_pages=6, page_size=4)
+    t0 = kv.alloc(0, 9)                   # 3 pages
+    assert len(t0.pages) == 3 and kv.stats().n_free == 3
+    kv.alloc(1, 12)                       # 3 more — pool full
+    with pytest.raises(MemoryError):
+        kv.alloc(2, 1)
+    assert not kv.can_alloc(1)
+    kv.free(0)
+    assert kv.stats().n_free == 3
+    t2 = kv.alloc(2, 5)                   # reuses request 0's pages
+    assert set(t2.pages) <= set(t0.pages)
+    assert kv.stats().peak_pages_used == 6
+    with pytest.raises(ValueError):
+        kv.alloc(2, 1)                    # double alloc
+
+
+def test_paged_write_gather_roundtrip():
+    cfg = get_config("llama3-8b").reduced()
+    L, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    kv = PagedKVCache(cfg, n_pages=8, page_size=4)
+    rng = np.random.default_rng(0)
+    kv.alloc(7, 10)
+    prompt_k = rng.standard_normal((L, 6, K, hd)).astype(np.float32)
+    prompt_v = rng.standard_normal((L, 6, K, hd)).astype(np.float32)
+    kv.write_prompt(7, {"k": prompt_k, "v": prompt_v})
+    tok_k = rng.standard_normal((L, 1, K, hd)).astype(np.float32)
+    tok_v = rng.standard_normal((L, 1, K, hd)).astype(np.float32)
+    kv.write_tokens([7], [6], {"k": tok_k[:, 0][:, None],
+                               "v": tok_v[:, 0][:, None]})
+    views = kv.gather([None, 7], cache_len=12)
+    assert views["k"].shape == (L, 2, 12, K, hd)
+    np.testing.assert_array_equal(views["k"][:, 1, :6], prompt_k)
+    np.testing.assert_array_equal(views["k"][:, 1, 6], tok_k[:, 0])
+    np.testing.assert_array_equal(views["v"][:, 1, 6], tok_v[:, 0])
+    assert kv.tables[7].length == 7
+    pt, ln = kv.page_table_array([None, 7])
+    assert ln.tolist() == [0, 7]
+    assert pt.shape == (2, 3) and pt[1, :3].tolist() == kv.tables[7].pages
+
+
+def test_paged_cache_rejects_recurrent_families():
+    with pytest.raises(ValueError):
+        PagedKVCache(get_config("rwkv6-7b").reduced(), n_pages=4,
+                     page_size=4)
+
+
+# ------------------------------------------------------------------ loadgen --
+
+def test_loadgen_continuous_batching_with_failure():
+    """A small Poisson-arrival load-generator run drains under continuous
+    batching with a mid-run device failure, and the latency report carries
+    both the measured and the engine-priced columns."""
+    sess, cfg, params = make_session(slots=4, n_dev=8, max_len=12)
+    rep = run_load(sess, n_streams=12, rate=4.0, prompt_len=(3, 6),
+                   max_new=(2, 3), seed=0, fail_ids=[5], fail_at_step=2)
+    assert rep.n_requests == 12
+    assert rep.n_tokens >= 24
+    assert rep.failed_ids == (5,)
+    assert rep.tokens_per_sec > 0 and rep.tokens_per_sec_priced > 0
+    assert 0 < rep.token_lat_p50 <= rep.token_lat_p99
+    assert 0 < rep.token_lat_p50_priced <= rep.token_lat_p99_priced
+    assert 0 < rep.e2e_p50 <= rep.e2e_p99
+    assert rep.plan_cache_hit_rate > 0.5
+    assert rep.cache.n_free == rep.cache.n_pages      # all pages returned
+    # virtual clock is monotone and admission-ordered
+    fins = sess.batcher.finished
+    assert all(r.finish_time >= r.admit_time >= r.arrival for r in fins)
+
+
+def test_serve_in_loop_paged_kernel_check():
+    """check_paged_read=True cross-checks the Pallas paged-KV kernel's
+    in-place pool read against the gathered contiguous view every step."""
+    sess, cfg, params = make_session(n_dev=4, check_paged_read=True,
+                                     slots=2)
+    for p in rand_prompts(cfg, 2, 4):
+        sess.submit(p, max_new=2)
+    rep = sess.run()
+    assert sess.paged_read_checks == rep.n_steps > 0
+
+
+def test_serve_budget_guard():
+    sess, cfg, params = make_session(max_len=8)
+    with pytest.raises(ValueError):
+        sess.submit(np.zeros(7, np.int32), max_new=5)   # budget 12 > 8
