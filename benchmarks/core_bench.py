@@ -139,12 +139,51 @@ def bench_executor(shapes=EXECUTOR_SHAPES, reps: int = 3) -> dict:
     }
 
 
+def calibrate_emulation(records) -> tuple:
+    """Fit the emulation substrate's two-parameter roofline
+    ``exec_time ≈ flops / gflops + overhead_s`` over warm observation
+    steps' per-GEMM records (least squares; falls back to aggregate
+    throughput when the fit degenerates).  The fleet executors *emulate* the edge
+    fleet on the host — they never sleep to match modeled link speeds — so
+    a prediction commensurable with measured host wall-seconds must price
+    the host, not the modeled edge devices (docs/PERF.md, overlap
+    model)."""
+    import numpy as np
+
+    fl = np.array([r.flops for r in records], dtype=np.float64)
+    ex = np.array([r.exec_time for r in records], dtype=np.float64)
+    gflops = float(fl.sum() / max(ex.sum(), 1e-12) / 1e9)
+    overhead = 0.0
+    if len(records) >= 2 and np.ptp(fl) > 0:
+        slope, intercept = np.polyfit(fl, ex, 1)
+        if slope > 0 and intercept >= 0:
+            gflops = float(1.0 / slope / 1e9)
+            overhead = float(intercept)
+    return gflops, overhead
+
+
 def bench_fleet_train(n_devices: int = 16, batch: int = 2,
                       seq: int = 32) -> dict:
-    """PS-centric end-to-end training step (``CleaveRuntime.train_step``):
-    one warm-up step (plan solves + tracing), one measured step, and the
-    per-step loss checked against the monolithic jitted step — the §3.2
-    "train on the fleet with exact semantics" claim as a tracked number."""
+    """PS-centric end-to-end training step (``CleaveRuntime.train_step``)
+    in BOTH dispatch modes — one warm-up step plus best-of-N observation
+    steps each, per-step loss checked against the monolithic jitted step
+    (the §3.2 "train on the fleet with exact semantics" claim as a
+    tracked number).
+
+    ``fleet_exec_s`` is the dataflow-dispatch measured executor time (the
+    production number; deferred Freivalds off the critical path), next to
+    ``fleet_exec_level_s`` (inline verify — the barrier-mode cost) and
+    their ratio ``dataflow_speedup_x``.
+
+    ``predicted_makespan_s`` is the engine's prediction of that measured
+    number: the executed GEMM trace priced on the *emulation substrate*
+    (``price_trace_emulated``), with the substrate's (GFLOP/s, overhead)
+    calibrated from observation steps other than the measured one —
+    prediction and measurement finally share a clock, and
+    ``predicted_vs_measured`` gates their convergence in ``--check``.  The modeled edge-fleet predictions
+    stay recorded in edge-seconds: ``predicted_makespan_edge_s`` (Eq. 1
+    barrier walk) and ``predicted_makespan_edge_overlap_s``
+    (``price_dataflow`` ready-set critical path)."""
     import jax
     import jax.numpy as jnp
 
@@ -154,6 +193,7 @@ def bench_fleet_train(n_devices: int = 16, batch: int = 2,
     from repro.launch.steps import make_train_step
     from repro.models import model as M
     from repro.optim import adam
+    from repro.train_loop.train_step import price_trace_emulated
 
     cfg = get_config("llama3-8b").reduced()
     opt_cfg = adam.AdamConfig(lr=3e-4, warmup_steps=2, total_steps=10)
@@ -163,32 +203,65 @@ def bench_fleet_train(n_devices: int = 16, batch: int = 2,
                                   global_batch=batch, seed=0))
     chunks = dict(q_chunk=16, k_chunk=16, loss_chunk=16)
     mono = jax.jit(make_train_step(cfg, opt_cfg, **chunks))
-    rt = CleaveRuntime(arch=cfg, fleet=Fleet.sample(n_devices, seed=0))
 
-    p_m, o_m = params, opt
-    p_f, o_f = params, opt
+    # one warm-up step, then N_OBS observation steps per mode.  Sub-second
+    # wall timings on a shared runner see ~2x scheduler-contention swings
+    # between adjacent steps, so the tracked numbers are best-of-N (the
+    # standard noise-robust timing estimator) and the calibration fit is
+    # taken OUT-OF-SAMPLE: position-wise minima over the observation steps
+    # that are NOT the selected measured step.
+    N_OBS = 3
     worst_rel = 0.0
-    rep = None
-    for step in range(2):                      # step 0 warms, step 1 counts
-        b = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
-        p_m, o_m, met_m = mono(p_m, o_m, b)
-        t0 = time.perf_counter()
-        p_f, o_f, met_f = rt.train_step(p_f, o_f, b, opt_cfg=opt_cfg,
-                                        **chunks)
-        step_wall = time.perf_counter() - t0
-        rep = met_f["fleet"]
-        lm, lf = float(met_m["loss"]), float(met_f["loss"])
-        worst_rel = max(worst_rel, abs(lm - lf) / abs(lm))
+    obs = {"level": [], "dataflow": []}        # per-mode observation reports
+    step_wall = 0.0
+    for dispatch in ("level", "dataflow"):
+        rt = CleaveRuntime(arch=cfg, fleet=Fleet.sample(n_devices, seed=0))
+        p_m, o_m = params, opt
+        p_f, o_f = params, opt
+        for step in range(1 + N_OBS):          # step 0 warms
+            b = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+            p_m, o_m, met_m = mono(p_m, o_m, b)
+            t0 = time.perf_counter()
+            p_f, o_f, met_f = rt.train_step(p_f, o_f, b, opt_cfg=opt_cfg,
+                                            dispatch=dispatch, **chunks)
+            wall = time.perf_counter() - t0
+            if step:
+                obs[dispatch].append(met_f["fleet"])
+            lm, lf = float(met_m["loss"]), float(met_f["loss"])
+            worst_rel = max(worst_rel, abs(lm - lf) / abs(lm))
+        if dispatch == "dataflow":
+            step_wall = wall
+    rep_lv = min(obs["level"], key=lambda r: r.fleet_exec_time)
+    rep_df = min(obs["dataflow"], key=lambda r: r.fleet_exec_time)
+    others = [r for r in obs["dataflow"] if r is not rep_df]
+    calib = [min((rep.records[i] for rep in others),
+                 key=lambda r: r.exec_time)
+             for i in range(len(rep_df.records))]
+    gflops, overhead = calibrate_emulation(calib)
+    predicted = price_trace_emulated(rep_df.records, gflops=gflops,
+                                     overhead_s=overhead)
+    measured = rep_df.fleet_exec_time
     return {
         "arch": cfg.name + "-reduced", "devices": n_devices,
         "batch": batch, "seq": seq,
         "step_wall_s": round(step_wall, 3),
-        "gemms_per_step": rep.n_gemms,
-        "tasks_per_step": rep.n_tasks,
-        "fleet_exec_s": round(rep.fleet_exec_time, 4),
-        "gemms_per_sec": round(rep.n_gemms / step_wall, 1),
-        "predicted_makespan_s": round(rep.predicted_makespan, 3),
-        "plan_cache_hit_rate": rep.plan_cache_hit_rate,
+        "gemms_per_step": rep_df.n_gemms,
+        "tasks_per_step": rep_df.n_tasks,
+        "fleet_exec_s": round(measured, 4),
+        "fleet_exec_level_s": round(rep_lv.fleet_exec_time, 4),
+        "dataflow_speedup_x": round(
+            rep_lv.fleet_exec_time / max(measured, 1e-9), 3),
+        "verify_overlap_s": round(rep_df.fleet_verify_time, 4),
+        "gemms_per_sec": round(rep_df.n_gemms / step_wall, 1),
+        "predicted_makespan_s": round(predicted, 4),
+        "predicted_vs_measured": round(
+            abs(predicted - measured) / max(measured, 1e-9), 3),
+        "emulation_gflops": round(gflops, 1),
+        "emulation_overhead_us": round(overhead * 1e6, 1),
+        "predicted_makespan_edge_s": round(rep_lv.predicted_makespan, 3),
+        "predicted_makespan_edge_overlap_s": round(
+            rep_df.predicted_makespan_overlap, 3),
+        "plan_cache_hit_rate": rep_df.plan_cache_hit_rate,
         "loss_rel_err_vs_monolithic": worst_rel,
         "parity_ok": bool(worst_rel <= 1e-4),
     }
@@ -214,7 +287,7 @@ def bench_fleet_serve(n_devices: int = 16, n_streams: int = 1000,
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     rt = CleaveRuntime(arch=cfg, fleet=Fleet.sample(n_devices, seed=0))
     sess = rt.serve_session(params, slots=slots, page_size=4, max_len=8,
-                            seed=0)
+                            seed=0, dispatch="dataflow")
     t0 = time.perf_counter()
     rep = run_load(sess, n_streams=n_streams, rate=200.0, prompt_len=4,
                    max_new=2, seed=0, fail_ids=[3], fail_at_step=5)
@@ -325,6 +398,22 @@ def check_against_baseline(baseline: dict, fresh: dict,
     if f_ts is not None:
         ok = b_ts is None or f_ts >= b_ts / tolerance
         out.append(("fleet_serve.tokens_per_sec", b_ts, f_ts, ok))
+    b_ft = baseline.get("fleet_train", {})
+    f_ft = fresh.get("fleet_train", {})
+    f_fe = f_ft.get("fleet_exec_s")
+    if f_fe is not None:
+        b_fe = b_ft.get("fleet_exec_s")
+        ok = b_fe is None or f_fe <= b_fe * tolerance + CHECK_ABS_SLACK_S
+        out.append(("fleet_train.fleet_exec_s", b_fe, f_fe, ok))
+    f_pm = f_ft.get("predicted_vs_measured")
+    if f_pm is not None:
+        b_pm = b_ft.get("predicted_vs_measured")
+        # the overlap-model acceptance bound: the calibrated-emulation
+        # prediction must stay within 50% of the measured executor time
+        # (baseline relaxes the bound only if it was already worse)
+        bound = max(0.5, (b_pm or 0.0) * tolerance)
+        out.append(("fleet_train.predicted_vs_measured", b_pm, f_pm,
+                    f_pm <= bound))
     return out
 
 
@@ -386,6 +475,13 @@ def main(out_path: str = "BENCH_core.json",
           f"{ft['step_wall_s']}s/step {ft['gemms_per_step']} gemms "
           f"({ft['gemms_per_sec']}/s) parity "
           f"{'OK' if ft['parity_ok'] else 'FAIL vs monolithic step'}")
+    print(f"fleet-train dispatch: dataflow {ft['fleet_exec_s']}s vs level "
+          f"{ft['fleet_exec_level_s']}s ({ft['dataflow_speedup_x']}x, "
+          f"verify overlapped {ft['verify_overlap_s']}s) | predicted "
+          f"{ft['predicted_makespan_s']}s vs measured {ft['fleet_exec_s']}s "
+          f"(rel err {ft['predicted_vs_measured']}) | edge-clock "
+          f"barrier={ft['predicted_makespan_edge_s']}s "
+          f"overlap={ft['predicted_makespan_edge_overlap_s']}s")
     fs = payload["fleet_serve"]
     print(f"fleet-serve/{fs['arch']}/D={fs['devices']}: "
           f"{fs['streams']} streams {fs['n_tokens']} toks | "

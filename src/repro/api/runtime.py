@@ -125,20 +125,36 @@ class LevelReport:
 
 @dataclass
 class BatchExecuteReport:
-    """Result of :meth:`CleaveRuntime.execute_batch`: a DAG level walk
-    executed for real, level by level (§3.2's schedule actually run)."""
+    """Result of :meth:`CleaveRuntime.execute_batch`: the batch's GemmDag
+    executed for real — level by level (``dispatch="level"``, §3.2's
+    barrier walk) or readiness-driven (``dispatch="dataflow"``, the
+    default: a node launches as soon as its producers complete, operand
+    staging is prefetched behind the running compute, and Freivalds
+    verification overlaps downstream gathers).  Either way ``levels``
+    groups the per-GEMM steps by DAG level, so level-shaped consumers read
+    the same report; under dataflow a level's ``level_time`` is the summed
+    step exec time attributed to that level, not a measured barrier."""
     request: PlanRequest
     backend: str
     levels: List[LevelReport]
     wall_time: float
-    predicted_gemm_time: float  # sum of engine-priced level makespans
+    predicted_gemm_time: float  # sum of engine-priced level makespans (Eq. 1)
     verified: bool
     n_tasks: int
     n_recovered: int
+    dispatch: str = "level"     # 'level' | 'dataflow'
+    # engine.price_dataflow critical path through the ready set — the
+    # barrier-free analog of predicted_gemm_time (dataflow dispatch only)
+    predicted_overlap_time: Optional[float] = None
+    n_redispatched: int = 0     # dependents re-run after a failed verify
 
     @property
     def n_levels(self) -> int:
         return len(self.levels)
+
+    @property
+    def steps(self) -> List[StepReport]:
+        return [s for lev in self.levels for s in lev.steps]
 
 
 @dataclass
@@ -335,6 +351,95 @@ class CleaveRuntime:
             plan_cached=cached, backend=backend, kernel=kern,
             gflops=gflops)
 
+    def execute_step_deferred(self, A: np.ndarray, B: np.ndarray, *,
+                              gemm: Optional[cm.GEMM] = None,
+                              fail_ids: Sequence[int] = (),
+                              corrupt_ids: Sequence[int] = (),
+                              verify: bool = True,
+                              backend: str = "numpy",
+                              dtype_policy=None, kernel: str = "auto",
+                              rng: Optional[np.random.Generator] = None,
+                              staged=None):
+        """Split-phase :meth:`execute_step` for dataflow dispatch: returns
+        ``(StepReport, finalize)`` where the report carries the compute
+        phase only (block GEMMs + scatter; ``exec_time`` excludes
+        verification) and ``finalize()`` runs the deferred Freivalds
+        checks — correcting any failed block in place, updating the
+        report's ``verified``/``n_recovered``, and returning the corrected
+        rects (truthy ⇒ dependents computed against a later-corrected
+        block must be re-dispatched).  Calling ``finalize()`` immediately
+        matches :meth:`execute_step`.
+
+        ``rng`` seeds the Freivalds draws; the dataflow dispatcher passes a
+        per-node child generator so overlapped verification cannot race the
+        session stream (default: a child split off ``self.rng``)."""
+        if gemm is None:
+            gemm = cm.GEMM(m=A.shape[0], n=A.shape[1], q=B.shape[1])
+        plan, cached = self._solve_gemm(gemm)
+        step, fin = self._execute_one_deferred(
+            gemm, plan, cached, A, B, fail_ids=fail_ids,
+            corrupt_ids=corrupt_ids, verify=verify, backend=backend,
+            dtype_policy=dtype_policy, kernel=kernel, rng=rng,
+            staged=staged)
+        self.history.append({
+            "event": "execute_step", "shape": (gemm.m, gemm.n, gemm.q),
+            "backend": step.backend, "deferred": True,
+            "verified": step.verified, "n_tasks": step.n_tasks,
+            "n_recovered": step.n_recovered, "plan_cached": cached})
+        return step, fin
+
+    def _execute_one_deferred(self, gemm: cm.GEMM, plan: cm.Plan,
+                              cached: bool, A: np.ndarray, B: np.ndarray,
+                              *, fail_ids: Sequence[int],
+                              corrupt_ids: Sequence[int], verify: bool,
+                              backend: str, dtype_policy, kernel: str,
+                              rng: Optional[np.random.Generator] = None,
+                              staged=None):
+        """Split-phase :meth:`_execute_one`.  The returned StepReport's
+        ``exec_time`` covers the compute phase only; ``finalize()``
+        (thread-safe against other nodes' compute) syncs the verification
+        outcome back into the report and returns the corrected rects."""
+        if rng is None:
+            # never hand the session generator to overlapped verification:
+            # a finalize racing the next node's draw would break seeded
+            # reproducibility of everything downstream
+            rng = np.random.default_rng(self.rng.integers(2 ** 63 - 1))
+        t0 = time.perf_counter()
+        if backend == "numpy":
+            rep, fin = executor.execute_plan_deferred(
+                gemm, plan, A, B, self.fleet.devices, fail_ids=fail_ids,
+                corrupt_ids=corrupt_ids, rng=rng, verify=verify,
+                staged=staged)
+            kern, gflops = "", 0.0
+        elif backend == "jax":
+            from repro.core import jax_executor
+            if self._pad_cache is None:
+                from repro.kernels.ops import PadCache
+                self._pad_cache = PadCache()
+            rep, fin = jax_executor.execute_plan_jax_deferred(
+                gemm, plan, A, B, self.fleet.table(), fail_ids=fail_ids,
+                corrupt_ids=corrupt_ids, rng=rng, verify=verify,
+                policy=dtype_policy, kernel=kernel,
+                pad_cache=self._pad_cache)
+            kern, gflops = rep.kernel, rep.gflops
+        else:
+            raise ValueError(f"unknown executor backend {backend!r}; "
+                             "expected 'numpy' or 'jax'")
+        step = StepReport(
+            gemm=gemm, plan=plan, output=rep.output, verified=rep.verified,
+            n_tasks=rep.n_tasks, n_recovered=rep.n_recovered,
+            recovery=rep.recovery, exec_time=time.perf_counter() - t0,
+            plan_cached=cached, backend=backend, kernel=kern,
+            gflops=gflops)
+
+        def finalize():
+            corrected = fin()
+            step.verified = rep.verified
+            step.n_recovered = rep.n_recovered
+            return corrected
+
+        return step, finalize
+
     def execute_level(self, pairs: Sequence[Tuple[np.ndarray, np.ndarray]],
                       *, gemms: Optional[Sequence[cm.GEMM]] = None,
                       fail_ids: Sequence[int] = (),
@@ -390,14 +495,31 @@ class CleaveRuntime:
                       inputs=None, max_levels: Optional[int] = None,
                       verify: bool = True, backend: str = "numpy",
                       dtype_policy=None, kernel: str = "auto",
-                      seed: Optional[int] = None) -> BatchExecuteReport:
-        """Walk the batch's GemmDag level by level and execute it for real
-        on the chosen backend — the schedule the session prices is the
-        schedule that runs.  ``inputs`` maps a GEMM to its ``(A, B)``
-        operands (default: seeded standard-normal float32 — a numerics
-        walk, not trained weights); count>1 GEMMs execute one
+                      seed: Optional[int] = None,
+                      dispatch: str = "dataflow",
+                      fail_ids: Sequence[int] = (),
+                      corrupt_ids: Sequence[int] = (),
+                      dataflow_workers: Optional[int] = None
+                      ) -> BatchExecuteReport:
+        """Execute the batch's GemmDag for real on the chosen backend — the
+        schedule the session prices is the schedule that runs.
+
+        ``dispatch="dataflow"`` (default) runs the readiness-driven walk
+        (``core.dataflow``): each GEMM launches as soon as its producers
+        complete, operand staging prefetches behind the running compute,
+        and Freivalds verification of node *k* overlaps node *k+1*'s
+        gathers (a failed check corrects the block and re-dispatches only
+        the dependents already in flight).  ``dispatch="level"`` is the
+        §3.2 barrier walk — the oracle the dataflow path is tested
+        against; outputs are identical for a fixed seed.
+
+        ``inputs`` maps a GEMM to its ``(A, B)`` operands (default: seeded
+        standard-normal float32 — a numerics walk, not trained weights;
+        operands are drawn in level order on both dispatch paths, so the
+        walks see the same matrices); count>1 GEMMs execute one
         representative instance.  ``max_levels`` bounds the walk for
-        smoke-level budgets."""
+        smoke-level budgets.  ``fail_ids`` / ``corrupt_ids`` inject device
+        failure / poisoned blocks into every executed GEMM."""
         if request is None:
             if batch is None or seq is None:
                 raise ValueError("execute_batch() needs batch+seq or a "
@@ -406,6 +528,9 @@ class CleaveRuntime:
                 batch=batch, seq=seq,
                 attention_scores=self.attention_scores,
                 heterogeneity_aware=self.heterogeneity_aware)
+        if dispatch not in ("level", "dataflow"):
+            raise ValueError(f"unknown dispatch {dispatch!r}; "
+                             "expected 'level' or 'dataflow'")
         dag = self._dag(request)
         in_rng = np.random.default_rng(self.seed if seed is None else seed)
         if inputs is None:
@@ -414,15 +539,25 @@ class CleaveRuntime:
                 B = in_rng.standard_normal((g.n, g.q)).astype(np.float32)
                 return A, B
         t0 = time.perf_counter()
-        levels: List[LevelReport] = []
-        for li, level in enumerate(dag.levels()):
-            if max_levels is not None and li >= max_levels:
-                break
-            pairs = [inputs(g) for g in level]
-            levels.append(self.execute_level(
-                pairs, gemms=level, verify=verify, backend=backend,
-                dtype_policy=dtype_policy, kernel=kernel,
-                heterogeneity_aware=request.heterogeneity_aware))
+        if dispatch == "level":
+            levels: List[LevelReport] = []
+            for li, level in enumerate(dag.levels()):
+                if max_levels is not None and li >= max_levels:
+                    break
+                pairs = [inputs(g) for g in level]
+                levels.append(self.execute_level(
+                    pairs, gemms=level, verify=verify, backend=backend,
+                    fail_ids=fail_ids, corrupt_ids=corrupt_ids,
+                    dtype_policy=dtype_policy, kernel=kernel,
+                    heterogeneity_aware=request.heterogeneity_aware))
+            overlap_time, n_redispatched = None, 0
+        else:
+            levels, overlap_time, n_redispatched = self._execute_dataflow(
+                dag, inputs, max_levels=max_levels, verify=verify,
+                backend=backend, dtype_policy=dtype_policy, kernel=kernel,
+                heterogeneity_aware=request.heterogeneity_aware,
+                fail_ids=fail_ids, corrupt_ids=corrupt_ids,
+                max_workers=dataflow_workers)
         report = BatchExecuteReport(
             request=request, backend=backend, levels=levels,
             wall_time=time.perf_counter() - t0,
@@ -430,38 +565,131 @@ class CleaveRuntime:
                                           for l in levels)),
             verified=all(l.verified for l in levels),
             n_tasks=sum(l.n_tasks for l in levels),
-            n_recovered=sum(l.n_recovered for l in levels))
+            n_recovered=sum(l.n_recovered for l in levels),
+            dispatch=dispatch, predicted_overlap_time=overlap_time,
+            n_redispatched=n_redispatched)
         self.history.append({
             "event": "execute_batch", "backend": backend,
+            "dispatch": dispatch,
             "batch": request.batch, "seq": request.seq,
             "n_levels": report.n_levels, "n_tasks": report.n_tasks,
             "verified": report.verified})
         return report
+
+    def _execute_dataflow(self, dag, inputs, *, max_levels, verify,
+                          backend, dtype_policy, kernel,
+                          heterogeneity_aware, fail_ids, corrupt_ids,
+                          max_workers=None):
+        """Readiness-driven DAG execution (the ``execute_batch`` dataflow
+        path): plans are pre-solved serially, operands pre-drawn in level
+        order (the same rng stream the barrier walk consumes), then
+        ``core.dataflow.run_dataflow`` dispatches nodes as their producers
+        finish.  Returns level-grouped StepReports plus the
+        ``price_dataflow`` overlapped prediction and the redispatch
+        count."""
+        from repro.core.dataflow import run_dataflow
+        from repro.sim.engine import price_dataflow, price_plan
+
+        level_groups = dag.level_order()
+        if max_levels is not None:
+            level_groups = level_groups[:max_levels]
+        included = [i for grp in level_groups for i in grp]
+        idx_of = {i: k for k, i in enumerate(included)}
+        gemms = [dag.gemms[i] for i in included]
+        operands = [inputs(g) for g in gemms]       # level-order rng draws
+        plans, cached = [], []
+        for g in gemms:
+            p, c = self._solve_gemm(
+                g, heterogeneity_aware=heterogeneity_aware)
+            plans.append(p)
+            cached.append(c)
+        prices = [price_plan(g, p, self.fleet.devices)
+                  for g, p in zip(gemms, plans)]
+        full_deps = dag.dependencies()
+        deps = [[idx_of[j] for j in full_deps[i] if j in idx_of]
+                for i in included]
+        overlap_time = float(price_dataflow(
+            list(zip(gemms, plans)), list(self.fleet.devices), deps=deps))
+
+        if backend == "jax" and self._pad_cache is None:
+            from repro.kernels.ops import PadCache
+            self._pad_cache = PadCache()
+        self.fleet.table()          # build the SoA view before threading
+        base_seed = int(self.rng.integers(2 ** 63 - 1))
+        staged: Dict[int, tuple] = {}
+
+        def compute(k):
+            A, B = operands[k]
+            return self._execute_one_deferred(
+                gemms[k], plans[k], cached[k], A, B, fail_ids=fail_ids,
+                corrupt_ids=corrupt_ids, verify=verify, backend=backend,
+                dtype_policy=dtype_policy, kernel=kernel,
+                rng=np.random.default_rng([base_seed, k]),
+                staged=staged.get(k))
+
+        def prefetch(k):
+            A, B = operands[k]
+            if backend == "numpy":
+                staged[k] = executor.stage_operands_f64(A, B)
+            elif not fail_ids:
+                # warm the device-side PadCache with the node's padded
+                # operands (recovery reshapes the rects, so a failing run
+                # stages inside the launch instead)
+                from repro.kernels import ops
+                rects = [(a.r0, a.r1, a.c0, a.c1)
+                         for a in plans[k].assignments]
+                if rects:
+                    ops.stage_plan_operands(A, B, rects,
+                                            pad_cache=self._pad_cache)
+
+        steps, dfr = run_dataflow(len(included), deps, compute,
+                                  prefetch=prefetch,
+                                  max_workers=max_workers)
+        levels: List[LevelReport] = []
+        for grp in level_groups:
+            ks = [idx_of[i] for i in grp]
+            lsteps = [steps[k] for k in ks]
+            levels.append(LevelReport(
+                steps=lsteps, backend=backend,
+                level_time=float(sum(s.exec_time for s in lsteps)),
+                predicted_makespan=float(max(prices[k] for k in ks)),
+                verified=all(s.verified for s in lsteps),
+                n_tasks=sum(s.n_tasks for s in lsteps),
+                n_recovered=sum(s.n_recovered for s in lsteps)))
+        return levels, overlap_time, dfr.n_redispatched
 
     # ---------------------------------------------------------------- train --
 
     def train_session(self, opt_cfg=None, *, backend: str = "numpy",
                       kernel: str = "auto", dtype_policy=None,
                       verify: bool = True, q_chunk: int = 64,
-                      k_chunk: int = 64, loss_chunk: int = 64):
+                      k_chunk: int = 64, loss_chunk: int = 64,
+                      dispatch: str = "level"):
         """A fresh PS-centric training session
         (:class:`repro.train_loop.FleetTrainSession`): every projection GEMM
         of ``session.step(params, opt_state, batch)`` — forward and the
         dA/dW backward mirrors — executes through this runtime's fleet
         executors (plan cache, Freivalds, churn recovery), while the PS
-        hosts norms/softmax/loss/AdamW (§3.2)."""
+        hosts norms/softmax/loss/AdamW (§3.2).
+
+        ``dispatch="dataflow"`` defers each GEMM's Freivalds verification
+        off the critical path (overlapped with the next GEMM's compute)
+        and prices the step with the barrier-free overlap model;
+        ``dispatch="level"`` (default) verifies inline — the oracle the
+        parity suites pin."""
         from repro.train_loop import FleetTrainSession
         return FleetTrainSession(self, opt_cfg=opt_cfg, backend=backend,
                                  kernel=kernel, dtype_policy=dtype_policy,
                                  verify=verify, q_chunk=q_chunk,
-                                 k_chunk=k_chunk, loss_chunk=loss_chunk)
+                                 k_chunk=k_chunk, loss_chunk=loss_chunk,
+                                 dispatch=dispatch)
 
     def train_step(self, params, opt_state, batch, *, opt_cfg=None,
                    backend: str = "numpy", kernel: str = "auto",
                    verify: bool = True,
                    fail_ids: Sequence[int] = (), fail_at_gemm: int = 0,
                    q_chunk: int = 64, k_chunk: int = 64,
-                   loss_chunk: int = 64):
+                   loss_chunk: int = 64, dispatch: str = "level"):
         """One fleet-executed training step of the session architecture:
         numerically matches the monolithic jitted
         ``launch.steps.make_train_step`` while every DAG GEMM runs on the
@@ -485,12 +713,13 @@ class CleaveRuntime:
             from repro.optim import adam
             opt_cfg = adam.AdamConfig()
         key = (opt_cfg, backend, kernel, verify, q_chunk, k_chunk,
-               loss_chunk)
+               loss_chunk, dispatch)
         session = self._train_sessions.get(key)
         if session is None:
             session = self.train_session(
                 opt_cfg, backend=backend, kernel=kernel, verify=verify,
-                q_chunk=q_chunk, k_chunk=k_chunk, loss_chunk=loss_chunk)
+                q_chunk=q_chunk, k_chunk=k_chunk, loss_chunk=loss_chunk,
+                dispatch=dispatch)
             self._train_sessions[key] = session
         return session.step(params, opt_state, batch, fail_ids=fail_ids,
                             fail_at_gemm=fail_at_gemm)
@@ -502,7 +731,8 @@ class CleaveRuntime:
                       kv_int8: bool = False, backend: str = "numpy",
                       kernel: str = "auto", dtype_policy=None,
                       verify: bool = True, check_paged_read: bool = False,
-                      n_pages: Optional[int] = None, seed: int = 0):
+                      n_pages: Optional[int] = None, seed: int = 0,
+                      dispatch: str = "level"):
         """A fleet-backed decode serving session
         (:class:`repro.serving.ServeSession`): continuous batching over
         ``slots`` fixed batch lanes, prompt/generation K/V in a PS-hosted
@@ -512,15 +742,18 @@ class CleaveRuntime:
         projections, SwiGLU, lm_head — coalesced across the batch and
         executed on this runtime's fleet (plan cache, Freivalds, churn
         recovery).  ``submit()`` requests, ``step()``/``run()`` to decode;
-        the report prices every step with ``sim/engine.price_plan`` next to
-        measured wall time (docs/SERVING.md)."""
+        the report prices every step with ``sim/engine`` next to measured
+        wall time (docs/SERVING.md).  ``dispatch="dataflow"`` defers each
+        GEMM's verification off the decode critical path and prices the
+        step's GEMM chain through ``engine.price_dataflow`` (handoff
+        overlap) instead of the per-GEMM barrier sum."""
         from repro.serving import ServeSession
         return ServeSession(self, params, slots=slots, page_size=page_size,
                             max_len=max_len, kv_int8=kv_int8,
                             backend=backend, kernel=kernel,
                             dtype_policy=dtype_policy, verify=verify,
                             check_paged_read=check_paged_read,
-                            n_pages=n_pages, seed=seed)
+                            n_pages=n_pages, seed=seed, dispatch=dispatch)
 
     # -------------------------------------------------------------- recover --
 

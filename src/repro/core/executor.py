@@ -13,7 +13,7 @@ backends cannot drift.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple, Union
+from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -71,6 +71,80 @@ def build_task_list(gemm: cm.GEMM, plan: cm.Plan, devices: cm.Fleetlike,
     return tasks, recovery
 
 
+def stage_operands_f64(A: np.ndarray, B: np.ndarray
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Pre-cast both operands to the f64 compute dtype.  The dataflow
+    dispatcher runs this on the prefetch pool so the next node's staging
+    overlaps the current node's compute; slicing the staged copies is
+    bit-identical to the per-task ``astype`` casts."""
+    return np.ascontiguousarray(A, np.float64), \
+        np.ascontiguousarray(B, np.float64)
+
+
+def execute_plan_deferred(
+        gemm: cm.GEMM, plan: cm.Plan, A: np.ndarray, B: np.ndarray,
+        devices: cm.Fleetlike,
+        fail_ids: Sequence[int] = (),
+        corrupt_ids: Sequence[int] = (),
+        rng: Union[np.random.Generator, int, None] = None,
+        verify: bool = True,
+        staged: Optional[Tuple[np.ndarray, np.ndarray]] = None,
+        ) -> Tuple[ExecutionReport, Callable[[], List[TaskRect]]]:
+    """Split-phase :func:`execute_plan`: the compute phase runs every task's
+    block GEMM and scatters it into C immediately; the returned ``finalize``
+    closure re-walks the scattered blocks in the same task order and runs the
+    Freivalds checks, recomputing (and patching into C) any block that fails.
+    Calling ``finalize()`` right away is bit-identical to ``execute_plan``;
+    the dataflow dispatcher instead overlaps it with the next node's compute.
+    ``staged`` optionally supplies prefetched f64 operand copies
+    (:func:`stage_operands_f64`).
+    """
+    rng = as_rng(rng)
+    m, q = gemm.m, gemm.q
+    assert A.shape == (m, gemm.n) and B.shape == (gemm.n, q)
+    if staged is not None:
+        A64, B64 = staged
+    else:
+        A64 = A if A.dtype == np.float64 else A.astype(np.float64)
+        B64 = B if B.dtype == np.float64 else B.astype(np.float64)
+    C = np.zeros((m, q), np.float64)
+    filled = np.zeros((m, q), bool)
+    corrupt = set(corrupt_ids)
+    n_rec = 0
+
+    tasks, recovery = build_task_list(gemm, plan, devices, fail_ids)
+    for t in tasks:
+        r0, r1, c0, c1 = t.r0, t.r1, t.c0, t.c1
+        block = A64[r0:r1] @ B64[:, c0:c1]
+        if t.device_id in corrupt and block.size:
+            block[0, 0] += 1.0 + abs(block[0, 0])
+        assert not filled[r0:r1, c0:c1].any(), "overlapping assignment"
+        C[r0:r1, c0:c1] = block
+        filled[r0:r1, c0:c1] = True
+        if t.is_recovery:
+            n_rec += 1
+    assert filled.all(), "coverage violated"
+
+    report = ExecutionReport(output=C, verified=True, n_tasks=len(tasks),
+                             n_recovered=n_rec, recovery=recovery)
+
+    def finalize() -> List[TaskRect]:
+        corrected: List[TaskRect] = []
+        if not verify:
+            return corrected
+        for t in tasks:
+            r0, r1, c0, c1 = t.r0, t.r1, t.c0, t.c1
+            Ab = A64[r0:r1]
+            Bb = B64[:, c0:c1]
+            if not freivalds(Ab, Bb, C[r0:r1, c0:c1], rng):
+                report.verified = False
+                C[r0:r1, c0:c1] = Ab @ Bb  # PS re-dispatch -> local recompute
+                corrected.append(t)
+        return corrected
+
+    return report, finalize
+
+
 def execute_plan(gemm: cm.GEMM, plan: cm.Plan, A: np.ndarray, B: np.ndarray,
                  devices: cm.Fleetlike,
                  fail_ids: Sequence[int] = (),
@@ -86,34 +160,8 @@ def execute_plan(gemm: cm.GEMM, plan: cm.Plan, A: np.ndarray, B: np.ndarray,
     None (seed 0).  Prefer driving this through
     ``repro.api.CleaveRuntime.execute_step``, which owns a session RNG.
     """
-    rng = as_rng(rng)
-    m, q = gemm.m, gemm.q
-    assert A.shape == (m, gemm.n) and B.shape == (gemm.n, q)
-    C = np.zeros((m, q), np.float64)
-    filled = np.zeros((m, q), bool)
-    corrupt = set(corrupt_ids)
-    verified = True
-    n_rec = 0
-
-    tasks, recovery = build_task_list(gemm, plan, devices, fail_ids)
-    for t in tasks:
-        r0, r1, c0, c1 = t.r0, t.r1, t.c0, t.c1
-        Ab = A[r0:r1].astype(np.float64)
-        Bb = B[:, c0:c1].astype(np.float64)
-        block = Ab @ Bb
-        if t.device_id in corrupt and block.size:
-            block = block.copy()
-            block[0, 0] += 1.0 + abs(block[0, 0])
-        ok = freivalds(Ab, Bb, block, rng) if verify else True
-        if not ok:
-            verified = False
-            block = Ab @ Bb   # PS re-dispatches; model as local recompute
-        assert not filled[r0:r1, c0:c1].any(), "overlapping assignment"
-        C[r0:r1, c0:c1] = block
-        filled[r0:r1, c0:c1] = True
-        if t.is_recovery:
-            n_rec += 1
-
-    assert filled.all(), "coverage violated"
-    return ExecutionReport(output=C, verified=verified, n_tasks=len(tasks),
-                           n_recovered=n_rec, recovery=recovery)
+    report, finalize = execute_plan_deferred(
+        gemm, plan, A, B, devices, fail_ids=fail_ids,
+        corrupt_ids=corrupt_ids, rng=rng, verify=verify)
+    finalize()
+    return report

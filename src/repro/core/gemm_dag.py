@@ -48,6 +48,57 @@ class GemmDag:
             seen[(g.m, g.n, g.q, g.b)] += g.count
         return seen
 
+    def level_order(self) -> List[List[int]]:
+        """Node indices grouped by DAG level, levels ascending."""
+        out = {}
+        for i, g in enumerate(self.gemms):
+            out.setdefault(g.level, []).append(i)
+        return [out[k] for k in sorted(out)]
+
+    def dependencies(self) -> List[List[int]]:
+        """Per-node producer indices for dataflow dispatch.
+
+        The symbolic trace stores levels, not pointer-chased edges, so this
+        is the conservative within-layer reconstruction.  Forward: a node
+        at level l depends on the level-(l-1) nodes of its own layer (the
+        GEMMs whose outputs feed its operands through PS-side norms /
+        softmax / activations), widening to the whole previous level at
+        layer boundaries.  Backward: ``build_dag`` places dA at level
+        ``blv`` and dW at ``blv+1``, but both mirrors consume the *same*
+        cotangent dO — produced by the dA two backward levels up (the dW
+        sibling feeds the optimizer, not the chain rule), and dW's other
+        operand is the stashed forward activation (long complete).  So dA
+        at level L draws from level L-2 and dW at L from L-3, clamped to
+        the last forward level at the fwd->bwd turn; this keeps the two
+        mirrors of one GEMM mutually independent instead of falsely
+        serializing the whole backward pass.  GEMMs sharing a level stay
+        mutually independent (Table 6); false extra edges within a layer
+        are possible but never a missed true edge, so dataflow execution
+        ordered by these deps is always level-consistent.
+        """
+        by_level = {}
+        for i, g in enumerate(self.gemms):
+            by_level.setdefault(g.level, []).append(i)
+        order = sorted(by_level)
+        first_bwd = min(
+            (g.level for g in self.gemms
+             if g.name.endswith((".dA", ".dW"))), default=None)
+        deps: List[List[int]] = [[] for _ in self.gemms]
+        for li in range(1, len(order)):
+            for i in by_level[order[li]]:
+                g = self.gemms[i]
+                if first_bwd is not None and g.level >= first_bwd:
+                    src = g.level - (2 if g.name.endswith(".dA") else 3)
+                    if src < first_bwd:
+                        src = first_bwd - 1       # the fwd->bwd turn
+                    prev = by_level.get(src, [])
+                else:
+                    prev = by_level[order[li - 1]]
+                same = [j for j in prev
+                        if self.gemms[j].layer == g.layer]
+                deps[i] = same if same else list(prev)
+        return deps
+
 
 def _bytes(cfg) -> int:
     return 2 if "16" in cfg.dtype else 4

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Sequence, Union
+from typing import Callable, List, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -96,6 +96,7 @@ class JaxExecutionReport(ExecutionReport):
     exec_time: float = 0.0         # kernel + gather/scatter wall-clock
     gflops: float = 0.0            # achieved GFLOP/s over exec_time
     tasks_per_s: float = 0.0
+    verify_time: float = 0.0       # deferred Freivalds finalize wall-clock
 
 
 def _redispatch(Ab: np.ndarray, Bb: np.ndarray,
@@ -109,17 +110,28 @@ def _redispatch(Ab: np.ndarray, Bb: np.ndarray,
         preferred_element_type=jnp.float32), np.float32)
 
 
-def execute_plan_jax(gemm: cm.GEMM, plan: cm.Plan, A: np.ndarray,
-                     B: np.ndarray, devices: cm.Fleetlike,
-                     fail_ids: Sequence[int] = (),
-                     corrupt_ids: Sequence[int] = (),
-                     rng: Union[np.random.Generator, int, None] = None,
-                     verify: bool = True,
-                     policy: Union[str, DtypePolicy, None] = None,
-                     kernel: str = "auto",
-                     block: int = 128,
-                     pad_cache=None) -> JaxExecutionReport:
-    """Execute every assignment rectangle on the JAX backend.
+def execute_plan_jax_deferred(
+        gemm: cm.GEMM, plan: cm.Plan, A: np.ndarray,
+        B: np.ndarray, devices: cm.Fleetlike,
+        fail_ids: Sequence[int] = (),
+        corrupt_ids: Sequence[int] = (),
+        rng: Union[np.random.Generator, int, None] = None,
+        verify: bool = True,
+        policy: Union[str, DtypePolicy, None] = None,
+        kernel: str = "auto",
+        block: int = 128,
+        pad_cache=None
+        ) -> Tuple[JaxExecutionReport, Callable[[], List[tuple]]]:
+    """Split-phase :func:`execute_plan_jax`: the compute phase runs the
+    bucket launches (which emit the device-side Freivalds residuals in the
+    same launch) and scatters the blocks; the returned ``finalize`` closure
+    reduces the residuals against the policy tolerance, confirms flagged
+    blocks with the host oracle, and re-dispatches genuine corruption —
+    updating ``report.verified``/``report.verify_time`` and returning the
+    corrected rects.  Calling ``finalize()`` immediately matches
+    :func:`execute_plan_jax`; the dataflow dispatcher overlaps it with the
+    next node's gathers instead (verification of node *k* behind node
+    *k+1*'s staging).
 
     Semantics mirror :func:`repro.core.executor.execute_plan` (the two
     backends share :func:`repro.core.executor.build_task_list`, so task
@@ -168,11 +180,12 @@ def execute_plan_jax(gemm: cm.GEMM, plan: cm.Plan, A: np.ndarray,
 
     C = np.zeros((m, q), np.float32)
     filled = np.zeros((m, q), bool)
-    verified = True
     flops = 0.0
+    run_dims = []
     for run in runs:
         hs = run.band_hs.astype(np.int64)[run.bidx]
         ws = (run.c1s - run.c0s).astype(np.int64)
+        run_dims.append((hs, ws))
         flops += 2.0 * gemm.n * float((hs * ws).sum())
         # vectorized scatter: each band bulk-writes the contiguous runs of
         # its rects' column-window union (a grid partition's bands tile the
@@ -199,30 +212,67 @@ def execute_plan_jax(gemm: cm.GEMM, plan: cm.Plan, A: np.ndarray,
             for g in np.nonzero(corrupt_mask[run.idx])[0]:
                 r0, c0 = rects[run.idx[g]][0], rects[run.idx[g]][2]
                 C[r0, c0] += 1.0 + abs(C[r0, c0])
-            continue
-        rtols = pol.freivalds_c * pol.eps * np.sqrt(
-            max(gemm.n, 1) / np.maximum(hs * ws, 1))
-        ok = np.all(
-            np.abs(run.lhs - run.rhs)
-            <= rtols[:, None] * np.abs(run.rhs)
-            + (rtols * (run.scale + 1e-30))[:, None], axis=1)
-        for g in np.nonzero(~ok)[0]:
-            # device-side residual flagged this block: confirm with the
-            # host oracle, then model the PS re-dispatch to a clean device
-            # (same dtype policy) for genuine corruption
-            i = run.idx[g]
-            r0, r1, c0, c1 = rects[i]
-            if freivalds(A[r0:r1], B[:, c0:c1], run.block(g), rng,
-                         rtol=float(rtols[g])):
-                continue
-            verified = False
-            C[r0:r1, c0:c1] = _redispatch(A[r0:r1], B[:, c0:c1], pol)
     exec_time = time.perf_counter() - t0
 
     assert filled.all(), "coverage violated"
     assert sum(t.area for t in tasks) == m * q, "overlapping assignment"
-    return JaxExecutionReport(
-        output=C, verified=verified, n_tasks=len(tasks), n_recovered=n_rec,
+    report = JaxExecutionReport(
+        output=C, verified=True, n_tasks=len(tasks), n_recovered=n_rec,
         recovery=recovery, backend="jax", kernel=kernel, policy=pol.name,
         exec_time=exec_time, gflops=flops / max(exec_time, 1e-12) / 1e9,
         tasks_per_s=len(tasks) / max(exec_time, 1e-12))
+
+    def finalize() -> List[tuple]:
+        corrected: List[tuple] = []
+        if not verify:
+            return corrected
+        t1 = time.perf_counter()
+        for run, (hs, ws) in zip(runs, run_dims):
+            rtols = pol.freivalds_c * pol.eps * np.sqrt(
+                max(gemm.n, 1) / np.maximum(hs * ws, 1))
+            ok = np.all(
+                np.abs(run.lhs - run.rhs)
+                <= rtols[:, None] * np.abs(run.rhs)
+                + (rtols * (run.scale + 1e-30))[:, None], axis=1)
+            for g in np.nonzero(~ok)[0]:
+                # device-side residual flagged this block: confirm with the
+                # host oracle, then model the PS re-dispatch to a clean
+                # device (same dtype policy) for genuine corruption
+                i = run.idx[g]
+                r0, r1, c0, c1 = rects[i]
+                if freivalds(A[r0:r1], B[:, c0:c1], run.block(g), rng,
+                             rtol=float(rtols[g])):
+                    continue
+                report.verified = False
+                C[r0:r1, c0:c1] = _redispatch(A[r0:r1], B[:, c0:c1], pol)
+                corrected.append((r0, r1, c0, c1))
+        report.verify_time += time.perf_counter() - t1
+        return corrected
+
+    return report, finalize
+
+
+def execute_plan_jax(gemm: cm.GEMM, plan: cm.Plan, A: np.ndarray,
+                     B: np.ndarray, devices: cm.Fleetlike,
+                     fail_ids: Sequence[int] = (),
+                     corrupt_ids: Sequence[int] = (),
+                     rng: Union[np.random.Generator, int, None] = None,
+                     verify: bool = True,
+                     policy: Union[str, DtypePolicy, None] = None,
+                     kernel: str = "auto",
+                     block: int = 128,
+                     pad_cache=None) -> JaxExecutionReport:
+    """Execute every assignment rectangle on the JAX backend, verifying
+    inline (compute phase + immediate finalize — see
+    :func:`execute_plan_jax_deferred` for the split-phase form the dataflow
+    dispatcher overlaps)."""
+    report, finalize = execute_plan_jax_deferred(
+        gemm, plan, A, B, devices, fail_ids=fail_ids,
+        corrupt_ids=corrupt_ids, rng=rng, verify=verify, policy=policy,
+        kernel=kernel, block=block, pad_cache=pad_cache)
+    finalize()
+    report.exec_time += report.verify_time
+    report.gflops = (report.gflops * (report.exec_time - report.verify_time)
+                     / max(report.exec_time, 1e-12))
+    report.tasks_per_s = report.n_tasks / max(report.exec_time, 1e-12)
+    return report

@@ -61,11 +61,20 @@ class PadCache:
     fingerprints as a miss instead of serving a stale device copy.
     Non-contiguous sources skip the cache (fingerprinting them would cost
     a copy anyway).
+
+    Access is serialized by an RLock: the dataflow dispatcher's prefetch
+    pool stages the next node's operands (:func:`stage_plan_operands`)
+    while the current node's compute thread reads the same cache, so the
+    MRU list mutations must not race.  ``build`` runs under the lock —
+    double-buffered staging relies on a prefetched entry being fully
+    device-resident before a concurrent reader can hit its key.
     """
 
     def __init__(self, capacity: int = 8):
+        import threading
         self.capacity = capacity
         self._slots: list = []      # (key, value), MRU first
+        self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
 
@@ -81,17 +90,18 @@ class PadCache:
         if fp is None:
             return build()          # non-contiguous source: skip caching
         key = key + (fp,)
-        for i, (k, val) in enumerate(self._slots):
-            if k == key:
-                if i:
-                    self._slots.insert(0, self._slots.pop(i))
-                self.hits += 1
-                return val
-        val = build()
-        self.misses += 1
-        self._slots.insert(0, (key, val))
-        del self._slots[self.capacity:]
-        return val
+        with self._lock:
+            for i, (k, val) in enumerate(self._slots):
+                if k == key:
+                    if i:
+                        self._slots.insert(0, self._slots.pop(i))
+                    self.hits += 1
+                    return val
+            val = build()
+            self.misses += 1
+            self._slots.insert(0, (key, val))
+            del self._slots[self.capacity:]
+            return val
 
 
 def _staged_pad(arr: np.ndarray, rows: int, cols: int, role: str,
@@ -251,6 +261,46 @@ class BucketRun:
         return self.out[b, :self.band_hs[b], self.c0s[g]:self.c1s[g]]
 
 
+def _bucket_geometry(a_shape, b_shape, rects, block):
+    """The shared band/bucket/padding geometry of a rect set: MXU-aligned
+    padded depths (nk, qk), row bands, and padded-height buckets.  Single
+    source for :func:`plan_gemm_buckets` and :func:`stage_plan_operands`,
+    so a prefetched padded operand lands on exactly the key the launch
+    will look up."""
+    n = a_shape[1]
+    q = b_shape[1]
+    nk = max(-(-n // block) * block, block)
+    qk = max(-(-q // block) * block, block)
+    bands: dict = {}                     # (r0, r1) -> [rect index, ...]
+    for i, (r0, r1, c0, c1) in enumerate(rects):
+        if r1 - r0 <= 0 or c1 - c0 <= 0:
+            continue
+        bands.setdefault((r0, r1), []).append(i)
+    buckets: dict = {}                   # pm -> [(r0, r1), ...]
+    for (r0, r1) in bands:
+        pm = -(-(r1 - r0) // block) * block
+        buckets.setdefault(pm, []).append((r0, r1))
+    return nk, qk, bands, buckets
+
+
+def stage_plan_operands(a, b, rects, *, block=128,
+                        pad_cache: Optional[PadCache] = None):
+    """Pre-stage the padded device operands :func:`plan_gemm_buckets`
+    would build for ``rects`` — same geometry, same cache keys — so the
+    dataflow dispatcher's prefetch pool can double-buffer the next node's
+    gathers against the current node's compute.  Returns
+    ``(a_pad, b_pad)`` (or ``(None, None)`` for an empty rect set)."""
+    a = np.asarray(a)
+    b = np.asarray(b)
+    nk, qk, bands, buckets = _bucket_geometry(a.shape, b.shape, rects, block)
+    if not bands:
+        return None, None
+    pmax = max(buckets)
+    a_pad = _staged_pad(a, a.shape[0] + pmax, nk, "a", pad_cache)
+    b_pad = _staged_pad(b, nk, qk, "b", pad_cache)
+    return a_pad, b_pad
+
+
 def plan_gemm_buckets(a, b, rects, *, block=128, kernel="auto",
                       compute_dtype=None, verify_seed=None,
                       freivalds_iters: int = 2, corrupt=None,
@@ -282,20 +332,10 @@ def plan_gemm_buckets(a, b, rects, *, block=128, kernel="auto",
     b = np.asarray(b)
     m, n = a.shape
     q = b.shape[1]
-    nk = max(-(-n // block) * block, block)
-    qk = max(-(-q // block) * block, block)
-    bands: dict = {}                     # (r0, r1) -> [rect index, ...]
-    for i, (r0, r1, c0, c1) in enumerate(rects):
-        if r1 - r0 <= 0 or c1 - c0 <= 0:
-            continue
-        bands.setdefault((r0, r1), []).append(i)
+    nk, qk, bands, buckets = _bucket_geometry(a.shape, b.shape, rects, block)
     runs: list = []
     if not bands:
         return runs
-    buckets: dict = {}                   # pm -> [(r0, r1), ...]
-    for (r0, r1) in bands:
-        pm = -(-(r1 - r0) // block) * block
-        buckets.setdefault(pm, []).append((r0, r1))
     # pad once: rows past the edge make every band gather legal
     pmax = max(buckets)
     a_pad = _staged_pad(a, m + pmax, nk, "a", pad_cache)

@@ -83,7 +83,8 @@ class _Dev:
 
 class _Chain:
     __slots__ = ("cid", "device_id", "level", "items", "current", "epoch",
-                 "started", "done", "start_t", "pstate", "is_repair")
+                 "started", "done", "start_t", "pstate", "is_repair",
+                 "deps_left", "dependents")
 
     def __init__(self, cid, device_id, level, items):
         self.cid = cid
@@ -97,6 +98,8 @@ class _Chain:
         self.start_t = 0.0
         self.pstate = None          # pipeline-mode progress
         self.is_repair = False
+        self.deps_left = 0          # unfinished producer chains gating start
+        self.dependents: List[int] = []
 
 
 class _Link:
@@ -169,13 +172,25 @@ class TimelineEngine:
     # ------------------------------------------------------------- set-up --
 
     def add_chain(self, device_id: int, items: Sequence[WorkItem],
-                  level: Optional[int] = None) -> int:
+                  level: Optional[int] = None,
+                  deps: Sequence[int] = ()) -> int:
         """Register a serialized chain of items on a device.  ``level``
-        overrides the items' own level for barrier bookkeeping."""
+        overrides the items' own level for barrier bookkeeping.
+
+        ``deps`` lists producer chain ids that must finish before this
+        chain may start — the dataflow (ready-set) dispatch model: within
+        its level the chain is held back until its last dependency
+        completes instead of launching at the level barrier.  Dependencies
+        must live in the same or an earlier level."""
         if device_id not in self._devs:
             raise KeyError(f"unknown device {device_id}")
         lv = level if level is not None else (items[0].level if items else 0)
         ch = _Chain(len(self._chains), device_id, lv, items)
+        for cid in deps:
+            dep = self._chains[cid]
+            if not dep.done:
+                ch.deps_left += 1
+                dep.dependents.append(ch.cid)
         self._chains.append(ch)
         self._by_dev.setdefault(device_id, []).append(ch)
         self._by_level.setdefault(lv, []).append(ch)
@@ -183,7 +198,8 @@ class TimelineEngine:
         dev = self._devs[device_id]
         dev.load += sum(self._nominal(it, dev.device) for it in items)
         self._n_items += len(items)
-        if (self.current_level is not None and lv == self.current_level):
+        if (self.current_level is not None and lv == self.current_level
+                and ch.deps_left == 0):
             self._start_chain(ch, self.clock)      # hot-added mid-level
         return ch.cid
 
@@ -308,7 +324,7 @@ class TimelineEngine:
         self.current_level = lv
         self._log(t, "level", lv)
         for ch in list(self._by_level.get(lv, ())):
-            if not ch.started and not ch.done:
+            if not ch.started and not ch.done and ch.deps_left == 0:
                 self._start_chain(ch, t)
         if self._remaining.get(lv, 0) == 0:     # an emptied level
             self._advance_level(t)
@@ -330,6 +346,15 @@ class TimelineEngine:
         ch.done = True
         if completed:
             self._completions[ch.cid] = t
+        # release dependents even on an uncompleted finish (device failure):
+        # their data dependency is repaired elsewhere, and holding them
+        # forever would deadlock the ready set
+        for cid in ch.dependents:
+            dep = self._chains[cid]
+            dep.deps_left -= 1
+            if (dep.deps_left == 0 and not dep.started and not dep.done
+                    and dep.level == self.current_level):
+                self._start_chain(dep, t)
         lv = ch.level
         self._remaining[lv] = self._remaining.get(lv, 1) - 1
         if lv == self.current_level and self._remaining[lv] <= 0:
@@ -625,27 +650,39 @@ def _effective_n(n: int, n_split: int) -> int:
 
 
 def plan_chains(g: cm.GEMM, plan: cm.Plan, by_id: Dict[int, cm.Device],
-                n_pool: int, level: int = 0
-                ) -> List[Tuple[int, List[WorkItem]]]:
+                n_pool: int, level: int = 0, overlap: bool = False,
+                reps: int = 1) -> List[Tuple[int, List[WorkItem]]]:
     """Translate one solved GEMM plan into engine chains.  One chain per
     assignment rectangle (rectangles on one device overlap, matching
     ``plan_makespan``'s max-semantics); instance-granular plans get one
-    aggregated chain per device; ``n_split`` rounds and count>1 wave
-    factors become sequential items on the chain."""
+    aggregated chain per device; ``n_split`` rounds, count>1 wave factors,
+    and ``reps`` sequential repeats (loss chunking) become sequential items
+    on the chain.
+
+    ``overlap=True`` is the dataflow pricing mode: a chain's repeated
+    rounds collapse into ONE pipeline-mode item (Eq. 9' steady-state
+    quanta, ``k = rounds``) so the device streams round r+1's download
+    behind round r's compute instead of paying per-round latency — the
+    §3.2 quantum streaming the barrier model ignores."""
     from repro.core.scheduler import _wave_factor
     out: List[Tuple[int, List[WorkItem]]] = []
     if plan.instances is not None:
         for did, wi in plan.instances.items():
             d = by_id[did]
-            out.append((did, [WorkItem(
-                dl_bytes=wi * g.in_bytes, flops=wi * g.flops,
-                ul_bytes=wi * g.out_bytes,
+            item = WorkItem(
+                dl_bytes=reps * wi * g.in_bytes, flops=reps * wi * g.flops,
+                ul_bytes=reps * wi * g.out_bytes,
                 setup=max(d.dl_lat, d.ul_lat), level=level,
-                tag=("instances", g, plan, did))]))
+                tag=("instances", g, plan, did))
+            if overlap and reps * wi > 1:
+                item = replace(item, mode="pipeline",
+                                  k=max(int(reps * wi), 1))
+            out.append((did, [item]))
         return out
     rounds = plan.n_split
     if g.count > 1:
         rounds *= int(_wave_factor(g, plan, n_pool))
+    rounds *= max(int(reps), 1)
     n_eff = _effective_n(g.n, plan.n_split)
     for a in plan.assignments:
         d = by_id[a.device_id]
@@ -655,19 +692,129 @@ def plan_chains(g: cm.GEMM, plan: cm.Plan, by_id: Dict[int, cm.Device],
             ul_bytes=a.alpha * a.beta * g.b,
             dl_lat=d.dl_lat, ul_lat=d.ul_lat, level=level,
             tag=("assignment", g, plan, a))
-        out.append((a.device_id, [item] * rounds))
+        if overlap and rounds > 1:
+            item = replace(
+                item, dl_bytes=item.dl_bytes * rounds,
+                flops=item.flops * rounds, ul_bytes=item.ul_bytes * rounds,
+                mode="pipeline", k=rounds)
+            out.append((a.device_id, [item]))
+        else:
+            out.append((a.device_id, [item] * rounds))
     return out
 
 
 def price_plan(g: cm.GEMM, plan: cm.Plan, devices: Sequence[cm.Device],
-               n_pool: Optional[int] = None) -> float:
+               n_pool: Optional[int] = None, overlap: bool = False) -> float:
     """Deterministically price one plan's makespan through the engine (the
     single replacement for the per-level closed forms that used to be
-    duplicated across ``simulator``, ``streaming``, and ``mitigation``)."""
+    duplicated across ``simulator``, ``streaming``, and ``mitigation``).
+    ``overlap=True`` prices the dataflow dispatch of the same plan:
+    repeated rounds stream as pipeline quanta instead of serialized
+    latency-paying items (see :func:`plan_chains`)."""
     by_id = {d.device_id: d for d in devices}
     eng = TimelineEngine(devices)
-    for did, items in plan_chains(g, plan, by_id, n_pool or len(devices)):
+    for did, items in plan_chains(g, plan, by_id, n_pool or len(devices),
+                                  overlap=overlap):
         eng.add_chain(did, items, level=0)
+    return eng.run().makespan
+
+
+def price_dataflow(nodes: Sequence[tuple], devices: Sequence[cm.Device],
+                   *, deps: Optional[Sequence[Sequence[int]]] = None,
+                   n_pool: Optional[int] = None) -> float:
+    """Critical-path makespan of dependent GEMMs under dataflow dispatch —
+    the ready-set replacement for Eq. 1's sum-of-level-maxima.
+
+    ``nodes`` is a topologically-ordered sequence of ``(gemm, plan)`` or
+    ``(gemm, plan, reps)`` (``reps`` = sequential loss-chunk repeats);
+    ``deps[i]`` lists the producer node indices of node *i*.  Each
+    assignment rectangle becomes one engine chain whose start is gated on
+    (a) its own weight-prefetch chain — the B operand downloads as soon as
+    the device is known, double-buffered behind whatever the device is
+    computing — and (b) the producer chains whose output rows overlap the
+    rectangle's input rows (proportional row mapping; a producer feeds a
+    consumer through PS-side glue, so only the overlapping band gates it).
+    The A-operand download, compute, and upload then execute on the shared
+    timeline, so the result is the critical path through the ready set:
+    independent branches overlap, rounds stream as pipeline quanta, and a
+    slow producer only delays its own consumers instead of the whole
+    level."""
+    by_id = {d.device_id: d for d in devices}
+    pool = n_pool or len(devices)
+    eng = TimelineEngine(devices)
+    # topological order via Kahn's algorithm: callers hand nodes in model
+    # order, which need not resolve dependencies left-to-right (a DAG's
+    # backward mirrors are appended in forward order with descending levels)
+    n = len(nodes)
+    dep_lists = [list(deps[i]) if deps else [] for i in range(n)]
+    indeg = [len(d) for d in dep_lists]
+    out_edges: List[List[int]] = [[] for _ in range(n)]
+    for i, ds in enumerate(dep_lists):
+        for j in ds:
+            out_edges[j].append(i)
+    topo = [i for i in range(n) if indeg[i] == 0]
+    for i in topo:
+        for j in out_edges[i]:
+            indeg[j] -= 1
+            if indeg[j] == 0:
+                topo.append(j)
+    if len(topo) != n:
+        raise ValueError("price_dataflow: dependency cycle")
+    # (cid, r0, r1, m) per chain; r0 None = coarse chain (gates everything)
+    node_chains: Dict[int, List[tuple]] = {}
+    for i in topo:
+        node = nodes[i]
+        g, plan = node[0], node[1]
+        reps = int(node[2]) if len(node) > 2 else 1
+        my_deps = dep_lists[i]
+
+        def producer_cids(r0=None, r1=None, m=1):
+            cids = []
+            for j in my_deps:
+                for (cid, pr0, pr1, pm_) in node_chains[j]:
+                    if r0 is None or pr0 is None:
+                        cids.append(cid)
+                        continue
+                    lo = r0 / m * pm_
+                    hi = r1 / m * pm_
+                    if pr0 < hi and pr1 > lo:
+                        cids.append(cid)
+            return cids
+
+        chains_here: List[tuple] = []
+        coarse = (plan.instances is not None or g.count > 1
+                  or plan.n_split > 1 or not plan.assignments)
+        if coarse:
+            dep_cids = producer_cids()
+            for did, items in plan_chains(g, plan, by_id, pool,
+                                          overlap=True, reps=reps):
+                cid = eng.add_chain(did, items, level=0, deps=dep_cids)
+                chains_here.append((cid, None, None, g.m))
+        else:
+            n_eff = g.n
+            for a in plan.assignments:
+                d = by_id[a.device_id]
+                # weight prefetch: B columns stream down independently of
+                # the producers (double-buffered staging)
+                pre = eng.add_chain(a.device_id, [WorkItem(
+                    dl_bytes=n_eff * a.beta * g.b, flops=0.0, ul_bytes=0.0,
+                    dl_lat=d.dl_lat)], level=0)
+                main = WorkItem(
+                    dl_bytes=a.alpha * n_eff * g.b,
+                    flops=2.0 * a.alpha * a.beta * n_eff,
+                    ul_bytes=a.alpha * a.beta * g.b,
+                    dl_lat=d.dl_lat, ul_lat=d.ul_lat)
+                if reps > 1:
+                    main = replace(
+                        main, dl_bytes=main.dl_bytes * reps,
+                        flops=main.flops * reps,
+                        ul_bytes=main.ul_bytes * reps,
+                        mode="pipeline", k=reps)
+                dep_cids = producer_cids(a.r0, a.r1, g.m) + [pre]
+                cid = eng.add_chain(a.device_id, [main], level=0,
+                                    deps=dep_cids)
+                chains_here.append((cid, a.r0, a.r1, g.m))
+        node_chains[i] = chains_here
     return eng.run().makespan
 
 

@@ -44,12 +44,17 @@ class GemmRecord:
     q: int
     kind: str                   # 'fwd' | 'dA' | 'dW'
     exec_time: float            # host wall-clock of the fleet execution
+    #                             (dataflow dispatch: the compute phase
+    #                             only — verification overlaps downstream)
     predicted_makespan: float   # engine.price_plan of the executed plan
     n_tasks: int
     n_recovered: int
     verified: bool
     plan_cached: bool
     failed_ids: Tuple[int, ...] = ()
+    b: int = 4                  # element width the plan was solved for
+    verify_time: float = 0.0    # dataflow dispatch: wall of the deferred
+    #                             Freivalds check (off the critical path)
 
     @property
     def flops(self) -> float:
@@ -74,22 +79,38 @@ class FleetGemmSession:
 
     def __init__(self, runtime, *, backend: str = "numpy",
                  kernel: str = "auto", dtype_policy=None,
-                 verify: bool = True):
+                 verify: bool = True, dispatch: str = "level"):
         if backend not in ("numpy", "jax"):
             raise ValueError(f"unknown fleet backend {backend!r}; "
                              "expected 'numpy' or 'jax'")
+        if dispatch not in ("level", "dataflow"):
+            raise ValueError(f"unknown dispatch {dispatch!r}; "
+                             "expected 'level' or 'dataflow'")
         self.rt = runtime
         self.backend = backend
         self.kernel = kernel
         self.dtype_policy = dtype_policy
         self.verify = verify
+        # 'dataflow': each GEMM's Freivalds verification is deferred onto a
+        # background worker, overlapping the next GEMM's compute (autodiff
+        # serializes the GEMMs themselves — the verify is the one step-loop
+        # stage that can legally leave the critical path).  drain() joins
+        # the outstanding checks and back-fills the records, so a step's
+        # verified flag is always final by the time its report exists.
+        self.dispatch = dispatch
         self.records: List[GemmRecord] = []
         self.churn_reports: list = []
         self._armed: Optional[_ArmedFailure] = None
         self._gemm_index = 0
+        self._verify_pool = None
+        self._pending: List[tuple] = []     # (record, StepReport, future)
         # (m, n, q, fleet signature) -> price_plan, so steady-state steps
         # don't re-walk identical plans just to stamp their records
         self._price_memo: dict = {}
+        # (shape trace, fleet signature) -> price_dataflow makespan of a
+        # step's GEMM chain (price_step); decode steps repeat identical
+        # traces, so this hits after the first step
+        self._trace_price_memo: dict = {}
 
     # ------------------------------------------------------------- control --
 
@@ -125,8 +146,16 @@ class FleetGemmSession:
     def drain(self) -> Tuple[List[GemmRecord], list]:
         """Harvest (and clear) the per-step state accumulated since the
         last call: the GEMM trace and any churn reports this step's
-        failures produced.  Also disarms a pending failure, so an aborted
-        step can't leak its injection into the next one."""
+        failures produced.  Joins any deferred verifications first
+        (dataflow dispatch) and back-fills their records, so the harvested
+        trace always carries final ``verified`` flags.  Also disarms a
+        pending failure, so an aborted step can't leak its injection into
+        the next one."""
+        for record, step, fut in self._pending:
+            record.verify_time = fut.result()
+            record.verified = step.verified
+            record.n_recovered = step.n_recovered
+        self._pending = []
         out, self.records = self.records, []
         churn, self.churn_reports = self.churn_reports, []
         self._gemm_index = 0
@@ -152,6 +181,37 @@ class FleetGemmSession:
                                                self.rt.fleet.devices)
         return self._price_memo[key]
 
+    def price_step(self, records: Sequence[GemmRecord]) -> float:
+        """Engine price of one step's executed GEMM trace, matching the
+        session dispatch.  Level: each GEMM is a full PS round trip, so the
+        step costs the barrier sum of per-plan makespans.  Dataflow: the
+        trace is priced as a dependency *chain* through
+        ``engine.price_dataflow`` — GEMM k+1's operand downloads stream
+        behind GEMM k's uploads (§3.2 overlap), which is what the virtual
+        serve clock should charge when verification and staging are off
+        the critical path.  Memoized per (shape trace, fleet signature):
+        decode steps at fixed slot count repeat the identical trace."""
+        if self.dispatch != "dataflow":
+            return float(sum(r.predicted_makespan for r in records))
+        if not records:
+            return 0.0
+        key = (tuple((r.m, r.n, r.q, r.b) for r in records),
+               self.rt.fleet.signature())
+        hit = self._trace_price_memo.get(key)
+        if hit is None:
+            from repro.core import cost_model as cm
+            from repro.sim.engine import price_dataflow
+            nodes = []
+            for r in records:
+                g = cm.GEMM(m=r.m, n=r.n, q=r.q, b=r.b)
+                plan, _ = self.rt._solve_gemm(g)
+                nodes.append((g, plan))
+            deps = [[] if i == 0 else [i - 1] for i in range(len(nodes))]
+            hit = float(price_dataflow(nodes, list(self.rt.fleet.devices),
+                                       deps=deps))
+            self._trace_price_memo[key] = hit
+        return hit
+
     def _execute(self, a: np.ndarray, b: np.ndarray, kind: str) -> np.ndarray:
         fail_ids: Tuple[int, ...] = ()
         armed = self._armed
@@ -167,17 +227,39 @@ class FleetGemmSession:
         # training GEMM is b=4, not the cm.GEMM default of 2
         gemm = cm.GEMM(m=a.shape[0], n=a.shape[1], q=b.shape[1],
                        b=int(a.dtype.itemsize))
-        rep = self.rt.execute_step(
-            a, b, gemm=gemm, fail_ids=fail_ids, verify=self.verify,
-            backend=self.backend, dtype_policy=self.dtype_policy,
-            kernel=self.kernel)
-        self.records.append(GemmRecord(
+        if self.dispatch == "dataflow":
+            rep, fin = self.rt.execute_step_deferred(
+                a, b, gemm=gemm, fail_ids=fail_ids, verify=self.verify,
+                backend=self.backend, dtype_policy=self.dtype_policy,
+                kernel=self.kernel)
+
+            def _timed_verify():
+                t0 = time.perf_counter()
+                fin()
+                return time.perf_counter() - t0
+
+            if self._verify_pool is None:
+                from concurrent.futures import ThreadPoolExecutor
+                self._verify_pool = ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix="fleet-verify")
+            self._pending.append(
+                (None, rep, self._verify_pool.submit(_timed_verify)))
+        else:
+            rep = self.rt.execute_step(
+                a, b, gemm=gemm, fail_ids=fail_ids, verify=self.verify,
+                backend=self.backend, dtype_policy=self.dtype_policy,
+                kernel=self.kernel)
+        record = GemmRecord(
             m=rep.gemm.m, n=rep.gemm.n, q=rep.gemm.q, kind=kind,
             exec_time=rep.exec_time,
             predicted_makespan=self._price(rep.gemm, rep.plan),
             n_tasks=rep.n_tasks, n_recovered=rep.n_recovered,
             verified=rep.verified, plan_cached=rep.plan_cached,
-            failed_ids=fail_ids))
+            failed_ids=fail_ids, b=gemm.b)
+        if self.dispatch == "dataflow":
+            # back-patch the record once its deferred check lands (drain)
+            self._pending[-1] = (record, rep, self._pending[-1][2])
+        self.records.append(record)
         if fail_ids and armed is not None and armed.evict:
             # the failed devices are gone for good: evict them and patch the
             # plan cache so the rest of the step plans over survivors

@@ -39,9 +39,12 @@ class FleetStepReport:
     verified: bool               # every Freivalds check passed
     gemm_flops: float            # total fleet GEMM FLOPs this step
     fleet_exec_time: float       # host wall spent inside the executors
+    #                              (dataflow dispatch: compute phases only —
+    #                              deferred verification is off the path)
     wall_time: float             # total step wall (PS ops + fleet)
     predicted_makespan: float    # engine.price_plan sum over DAG levels —
     #                              the modeled edge-fleet batch GEMM time
+    #                              (Eq. 1 barrier walk)
     plan_cache_hit_rate: float   # of executed GEMMs; the pricing pass
     #                              pre-warms the same keys, so <1.0 means
     #                              churn dropped plans mid-step
@@ -50,6 +53,11 @@ class FleetStepReport:
     failed_ids: Tuple[int, ...] = ()
     n_plans_patched: int = 0     # cache patches when a failure was injected
     records: List[GemmRecord] = field(default_factory=list, repr=False)
+    dispatch: str = "level"      # executor dispatch the step ran under
+    # engine.price_dataflow critical path through the fleet-lowered DAG —
+    # the barrier-free edge prediction (dataflow-dispatch sessions only)
+    predicted_makespan_overlap: Optional[float] = None
+    fleet_verify_time: float = 0.0   # summed deferred-verify wall (dataflow)
 
     def log_line(self) -> str:
         s = (f"fleet: {self.n_gemms} gemms {self.n_tasks} tasks "
@@ -89,13 +97,20 @@ def fleet_lowered(name: str) -> bool:
 
 
 def price_request(rt, request, loss_chunk: Optional[int] = None,
-                  stats: Optional[dict] = None) -> float:
-    """Predicted edge-fleet GEMM makespan of one batch: the
-    **fleet-lowered** DAG GEMMs walked level by level, each level priced as
-    the max ``engine.price_plan`` over its (warm-loaded or solved) plans —
-    the prediction the executed step is compared against.  PS-local GEMMs
-    (:data:`PS_LOCAL_GEMMS`) are skipped so the prediction covers exactly
-    the work the fleet runs.
+                  stats: Optional[dict] = None,
+                  overlap: bool = False) -> float:
+    """Predicted edge-fleet GEMM makespan of one batch over the
+    **fleet-lowered** DAG GEMMs.  PS-local GEMMs (:data:`PS_LOCAL_GEMMS`)
+    are skipped so the prediction covers exactly the work the fleet runs.
+
+    ``overlap=False`` (default) is the Eq. 1 barrier walk: each level
+    priced as the max ``engine.price_plan`` over its plans, levels summed.
+    ``overlap=True`` prices the same plans through
+    ``engine.price_dataflow`` instead — the critical path through the
+    ready set, with producer edges taken from ``dag.dependencies()`` and
+    transitively closed over the skipped PS-local nodes (a lowered GEMM
+    whose direct producer runs on the PS inherits that producer's lowered
+    ancestors), which is what dataflow dispatch should converge to.
 
     ``loss_chunk`` mirrors ``models.model.loss_fn``'s LM-head chunking:
     the ``lm_head`` GEMM and its dA/dW mirrors are priced as the executed
@@ -105,33 +120,88 @@ def price_request(rt, request, loss_chunk: Optional[int] = None,
     the number of shapes this pricing pass solved cold."""
     from dataclasses import replace
 
-    from repro.sim.engine import price_plan
+    from repro.sim.engine import price_dataflow, price_plan
     dag = rt._dag(request)
     nc = 1
     if loss_chunk and request.seq % loss_chunk == 0 \
             and request.seq >= loss_chunk:
         nc = request.seq // loss_chunk
-    total = 0.0
-    for level in dag.levels():
-        level_time = 0.0
-        for g in level:
+
+    def chunked(g):
+        reps = 1
+        if nc > 1 and g.name.startswith("lm_head"):
+            # fwd (m=B·S) and dA chunk on rows; dW = Aᵀ·dO chunks on
+            # the contraction dim (one dW GEMM per loss chunk)
+            g = replace(g, n=g.n // nc) if g.name.endswith(".dW") \
+                else replace(g, m=g.m // nc)
+            reps = nc
+        plan, cached = rt._solve_gemm(
+            g, heterogeneity_aware=request.heterogeneity_aware)
+        if stats is not None and not cached:
+            stats["cold_solves"] = stats.get("cold_solves", 0) + 1
+        return g, plan, reps
+
+    if not overlap:
+        total = 0.0
+        for level in dag.levels():
+            level_time = 0.0
+            for g in level:
+                if not fleet_lowered(g.name):
+                    continue
+                g, plan, reps = chunked(g)
+                level_time = max(level_time, reps * price_plan(
+                    g, plan, rt.fleet.devices))
+            total += level_time
+        return total
+
+    deps_full = dag.dependencies()
+    lowered_pos: Dict[int, int] = {}
+    eff: Dict[int, List[int]] = {}      # node -> lowered ancestor closure
+    nodes: List[tuple] = []
+    node_deps: List[List[int]] = []
+    for grp in dag.level_order():       # closure needs level order
+        for i in grp:
+            g = dag.gemms[i]
+            ds = sorted({d for j in deps_full[i]
+                         for d in ([j] if j in lowered_pos else eff[j])})
             if not fleet_lowered(g.name):
+                eff[i] = ds             # pass producers through the PS op
                 continue
-            reps = 1
-            if nc > 1 and g.name.startswith("lm_head"):
-                # fwd (m=B·S) and dA chunk on rows; dW = Aᵀ·dO chunks on
-                # the contraction dim (one dW GEMM per loss chunk)
-                g = replace(g, n=g.n // nc) if g.name.endswith(".dW") \
-                    else replace(g, m=g.m // nc)
-                reps = nc
-            plan, cached = rt._solve_gemm(
-                g, heterogeneity_aware=request.heterogeneity_aware)
-            if stats is not None and not cached:
-                stats["cold_solves"] = stats.get("cold_solves", 0) + 1
-            level_time = max(level_time,
-                             reps * price_plan(g, plan, rt.fleet.devices))
-        total += level_time
-    return total
+            eff[i] = [i]
+            g, plan, reps = chunked(g)
+            lowered_pos[i] = len(nodes)
+            nodes.append((g, plan, reps))
+            node_deps.append([lowered_pos[j] for j in ds])
+    return float(price_dataflow(nodes, list(rt.fleet.devices),
+                                deps=node_deps))
+
+
+def price_trace_emulated(records: Sequence[GemmRecord], *,
+                         gflops: float, overhead_s: float) -> float:
+    """Engine price of an executed GEMM trace on the **emulation
+    substrate**: the host machine that actually ran the fleet executors,
+    modeled as one device executing the trace as a sequential chain (the
+    autodiff order the train loop dispatches in), each GEMM costing
+    ``overhead_s + flops / gflops``.
+
+    This is the prediction that is commensurable with the *measured*
+    ``fleet_exec_time`` — the edge-fleet prices (``price_request``) are in
+    modeled edge-seconds, a different clock from host wall-seconds, so
+    the bench's predicted-vs-measured convergence check calibrates
+    ``(gflops, overhead_s)`` from a warm-up step's records (see
+    ``benchmarks.core_bench.calibrate_emulation``) and prices later steps
+    through the same TimelineEngine that prices the edge fleet."""
+    from repro.core import cost_model as cm
+    from repro.sim.engine import TimelineEngine, WorkItem
+    if not records:
+        return 0.0
+    host = cm.Device(flops=max(gflops, 1e-9) * 1e9, dl_bw=1e30,
+                     ul_bw=1e30, dl_lat=0.0, ul_lat=0.0, device_id=0)
+    eng = TimelineEngine([host])
+    eng.add_chain(0, [WorkItem(dl_bytes=0.0, flops=r.flops, ul_bytes=0.0,
+                               setup=max(overhead_s, 0.0))
+                      for r in records])
+    return float(eng.run().makespan)
 
 
 class FleetTrainSession:
@@ -145,15 +215,16 @@ class FleetTrainSession:
                  backend: str = "numpy", kernel: str = "auto",
                  dtype_policy=None, verify: bool = True,
                  q_chunk: int = 64, k_chunk: int = 64,
-                 loss_chunk: int = 64):
+                 loss_chunk: int = 64, dispatch: str = "level"):
         from repro.optim import adam
         self.rt = runtime
         self.cfg = cfg if cfg is not None else runtime.cfg
         self.opt_cfg = opt_cfg or adam.AdamConfig()
+        self.dispatch = dispatch
         self.gemms = FleetGemmSession(runtime, backend=backend,
                                       kernel=kernel,
                                       dtype_policy=dtype_policy,
-                                      verify=verify)
+                                      verify=verify, dispatch=dispatch)
         self.chunks = dict(q_chunk=q_chunk, k_chunk=k_chunk,
                            loss_chunk=loss_chunk)
         self.step_index = 0
@@ -189,7 +260,7 @@ class FleetTrainSession:
         from repro.models import model as M
         from repro.optim import adam
 
-        predicted = self._predict(batch)
+        predicted, predicted_overlap = self._predict(batch)
         t0 = time.perf_counter()
         try:
             with self.gemms.open() as fleet:
@@ -239,7 +310,10 @@ class FleetTrainSession:
                                  / max(len(records), 1)),
             n_cold_plan_solves=self._last_cold_solves,
             failed_ids=fired_ids,
-            n_plans_patched=n_patched, records=records)
+            n_plans_patched=n_patched, records=records,
+            dispatch=self.dispatch,
+            predicted_makespan_overlap=predicted_overlap,
+            fleet_verify_time=sum(r.verify_time for r in records))
         # the caller's report carries the full per-GEMM trace; the
         # session-retained copy drops it so a long run doesn't grow
         # memory by ~50 records/step (the aggregates are what the log,
@@ -260,10 +334,12 @@ class FleetTrainSession:
 
     # ----------------------------------------------------------- internals --
 
-    def _predict(self, batch) -> float:
-        """Engine-priced batch GEMM makespan for this batch shape, cached
-        per (shape, fleet signature) so churn re-prices but steady-state
-        steps don't."""
+    def _predict(self, batch) -> Tuple[float, Optional[float]]:
+        """Engine-priced batch GEMM makespan for this batch shape —
+        ``(Eq. 1 barrier price, price_dataflow overlap price or None)`` —
+        cached per (shape, fleet signature) so churn re-prices but
+        steady-state steps don't.  The overlap price is only computed for
+        dataflow-dispatch sessions (same plans, different composition)."""
         from repro.api.runtime import PlanRequest
         tokens = np.asarray(batch["tokens"])
         b, s = int(tokens.shape[0]), int(tokens.shape[1])
@@ -273,9 +349,15 @@ class FleetTrainSession:
         key = (request, self.rt.fleet.signature())
         if key not in self._priced:
             stats: dict = {}
-            self._priced[key] = price_request(
+            barrier = price_request(
                 self.rt, request, loss_chunk=self.chunks["loss_chunk"],
                 stats=stats)
+            over = None
+            if self.dispatch == "dataflow":
+                over = price_request(
+                    self.rt, request, loss_chunk=self.chunks["loss_chunk"],
+                    overlap=True)
+            self._priced[key] = (barrier, over)
             self._last_cold_solves = stats.get("cold_solves", 0)
         else:
             self._last_cold_solves = 0

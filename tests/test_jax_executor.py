@@ -451,9 +451,10 @@ def test_execute_batch_level_walk(rng):
     from repro.configs.base import get_config
     cfg = get_config("opt-13b").reduced(n_layers=1, vocab_size=256)
     rt = CleaveRuntime(arch=cfg, fleet=Fleet.sample(8, seed=0))
-    rep_np = rt.execute_batch(2, 16, backend="numpy", max_levels=3, seed=5)
+    rep_np = rt.execute_batch(2, 16, backend="numpy", max_levels=3, seed=5,
+                              dispatch="level")
     rep_jx = rt.execute_batch(2, 16, backend="jax", kernel="xla",
-                              max_levels=3, seed=5)
+                              max_levels=3, seed=5, dispatch="level")
     assert rep_np.verified and rep_jx.verified
     assert rep_np.n_levels == rep_jx.n_levels == 3
     assert rep_np.n_tasks == rep_jx.n_tasks > 0
