@@ -17,6 +17,7 @@ from repro.api.fleet import Fleet
 from repro.api.mitigation import (CodedMitigation, MitigationPolicy,
                                   MitigationReport, NoMitigation,
                                   SpeculativeMitigation, get_mitigation)
+from repro.api.ps_group import PSGroup, ShardedFleet
 from repro.api.runtime import (BatchExecuteReport, ChurnReport,
                                CleaveRuntime, LevelReport, PlanReport,
                                PlanRequest, StepReport, StreamReport)
@@ -27,7 +28,8 @@ __all__ = [
     "AccountingResult", "AccountingStrategy", "BatchExecuteReport",
     "BroadcastAccounting", "ChurnReport", "CleaveRuntime", "CodedMitigation",
     "FailEvent", "Fleet", "JoinEvent", "LevelReport", "MitigationPolicy",
-    "MitigationReport", "NoMitigation", "PlanReport", "PlanRequest",
+    "MitigationReport", "NoMitigation", "PSGroup", "PlanReport",
+    "PlanRequest", "ShardedFleet",
     "SlowdownEvent", "SpeculativeMitigation", "StepReport", "StreamReport",
     "TimelineReport", "UnicastAccounting", "fail", "get_accounting",
     "get_mitigation", "join", "slowdown",

@@ -97,10 +97,13 @@ class Fleet:
         return Fleet([d for d in self.devices if d.device_id not in gone],
                      seed=self.seed)
 
-    def admit(self, device: Device) -> "Fleet":
+    def admit(self, device: Device, keep_id: bool = False) -> "Fleet":
         """Fleet after a joiner registers (fresh id, next-round folding,
-        §3.2 — no pause of in-flight work)."""
-        return Fleet(churn.admit(self.devices, device), seed=self.seed)
+        §3.2 — no pause of in-flight work).  ``keep_id=True`` preserves the
+        joiner's id — the PS-island reassignment path, where a device
+        migrating between shards keeps its fleet-wide identity."""
+        return Fleet(churn.admit(self.devices, device, keep_id=keep_id),
+                     seed=self.seed)
 
     # ------------------------------------------------------------- dunders --
 

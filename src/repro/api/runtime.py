@@ -664,7 +664,10 @@ class CleaveRuntime:
                       kernel: str = "auto", dtype_policy=None,
                       verify: bool = True, q_chunk: int = 64,
                       k_chunk: int = 64, loss_chunk: int = 64,
-                      dispatch: str = "level"):
+                      dispatch: str = "level", n_ps: int = 1,
+                      diloco=None, checkpoint=None,
+                      checkpoint_every: int = 100,
+                      backbone_bps: Optional[float] = None):
         """A fresh PS-centric training session
         (:class:`repro.train_loop.FleetTrainSession`): every projection GEMM
         of ``session.step(params, opt_state, batch)`` — forward and the
@@ -676,13 +679,39 @@ class CleaveRuntime:
         off the critical path (overlapped with the next GEMM's compute)
         and prices the step with the barrier-free overlap model;
         ``dispatch="level"`` (default) verifies inline — the oracle the
-        parity suites pin."""
+        parity suites pin.
+
+        ``checkpoint`` (a directory path or a
+        :class:`~repro.checkpointing.checkpoint.CheckpointManager`) enables
+        periodic PS-side snapshots every ``checkpoint_every`` steps;
+        ``session.restore(...)`` resumes bit-exactly.
+
+        ``n_ps > 1`` (or ``n_ps=None`` for envelope auto-sizing, or an
+        explicit ``diloco`` config) instead returns a
+        :class:`repro.train_loop.MultiPSTrainSession`: the fleet is
+        partitioned into flops-balanced PS islands (``api.ShardedFleet``),
+        each island runs H local inner steps per round
+        (``diloco.inner_steps``), and the sharded DiLoCo outer loop syncs
+        them at round boundaries — ``n_ps=1`` with ``inner_steps=1`` is
+        bit-identical to the single-PS session.  ``backbone_bps``
+        optionally prices the cross-PS sync over one shared backbone link
+        instead of per-PS NICs."""
+        if n_ps is None or n_ps > 1 or diloco is not None:
+            from repro.train_loop import MultiPSTrainSession
+            return MultiPSTrainSession(
+                self, n_ps=n_ps, opt_cfg=opt_cfg, diloco=diloco,
+                backend=backend, kernel=kernel, dtype_policy=dtype_policy,
+                verify=verify, q_chunk=q_chunk, k_chunk=k_chunk,
+                loss_chunk=loss_chunk, dispatch=dispatch,
+                checkpoint=checkpoint, checkpoint_every=checkpoint_every,
+                backbone_bps=backbone_bps)
         from repro.train_loop import FleetTrainSession
         return FleetTrainSession(self, opt_cfg=opt_cfg, backend=backend,
                                  kernel=kernel, dtype_policy=dtype_policy,
                                  verify=verify, q_chunk=q_chunk,
                                  k_chunk=k_chunk, loss_chunk=loss_chunk,
-                                 dispatch=dispatch)
+                                 dispatch=dispatch, checkpoint=checkpoint,
+                                 checkpoint_every=checkpoint_every)
 
     def train_step(self, params, opt_state, batch, *, opt_cfg=None,
                    backend: str = "numpy", kernel: str = "auto",
@@ -808,11 +837,13 @@ class CleaveRuntime:
             "n_plans_dropped": report.n_plans_dropped})
         return report
 
-    def on_join(self, device: cm.Device) -> Fleet:
+    def on_join(self, device: cm.Device, keep_id: bool = False) -> Fleet:
         """Admit a joiner: folded into the fleet for the next round (§3.2).
         The fleet signature changes, so subsequent plans re-solve and start
-        assigning the newcomer work."""
-        self.fleet = self.fleet.admit(device)
+        assigning the newcomer work.  ``keep_id=True`` preserves the
+        joiner's device id (island reassignment after a PS failure — the
+        device already has a fleet-wide identity)."""
+        self.fleet = self.fleet.admit(device, keep_id=keep_id)
         return self.fleet
 
     # -------------------------------------------------------------- stream --

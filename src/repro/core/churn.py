@@ -113,9 +113,20 @@ def recover(event: FailureEvent, devices: cm.Fleetlike,
         solve_time=solve_time)
 
 
-def admit(devices: List[cm.Device], new_device: cm.Device) -> List[cm.Device]:
+def admit(devices: List[cm.Device], new_device: cm.Device,
+          keep_id: bool = False) -> List[cm.Device]:
     """New device joins on the next GEMM round — no pause, no resharding of
-    in-flight work (§3.2)."""
-    nid = max((d.device_id for d in devices), default=-1) + 1
+    in-flight work (§3.2).  By default the joiner gets a fresh id (a
+    recycled id must never resurrect a dead device's cached plans);
+    ``keep_id=True`` preserves it — the island-reassignment path, where a
+    device migrating between PS shards keeps its fleet-wide identity so
+    churn bookkeeping stays coherent across islands."""
     import dataclasses
+    if keep_id:
+        if any(d.device_id == new_device.device_id for d in devices):
+            raise ValueError(
+                f"admit(keep_id=True): device_id {new_device.device_id} "
+                "already present in the fleet")
+        return list(devices) + [new_device]
+    nid = max((d.device_id for d in devices), default=-1) + 1
     return list(devices) + [dataclasses.replace(new_device, device_id=nid)]

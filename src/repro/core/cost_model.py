@@ -548,3 +548,32 @@ def optimizer_tail(gemms: Sequence[GEMM], ps: PSConfig) -> float:
     """C_OPTTAIL = max over weight GEMMs (pipelined by DAG level, §4.1)."""
     ts = [optimizer_time(g, ps) for g in gemms if g.layer >= 0]
     return max(ts) if ts else 0.0
+
+
+# ------------------------------------------------------ PS-shard partition --
+
+def partition_devices(devices: Fleetlike, k: int) -> list:
+    """Deterministic flops-balanced K-way fleet partition (the planner's
+    PS-affinity assignment for §6 multi-PS scale-out): greedy LPT — devices
+    in descending flops order land on the currently-lightest shard — so
+    island compute capacities stay within one device of each other and
+    inner DiLoCo steps finish in commensurate time.
+
+    ``k=1`` is the identity (original device order preserved — the
+    single-PS bit-parity path); ``k>1`` shards are returned in ascending
+    ``device_id`` order within each island.  Requires ``1 <= k <= len``.
+    """
+    tab = _as_table(devices)
+    devs = list(tab.devices)
+    if not 1 <= k <= len(devs):
+        raise ValueError(
+            f"partition_devices: need 1 <= k <= {len(devs)}, got k={k}")
+    if k == 1:
+        return [devs]
+    bins: list = [[] for _ in range(k)]
+    loads = [0.0] * k
+    for d in sorted(devs, key=lambda d: (-d.flops, d.device_id)):
+        i = min(range(k), key=lambda j: (loads[j], j))
+        bins[i].append(d)
+        loads[i] += d.flops
+    return [sorted(b, key=lambda d: d.device_id) for b in bins]

@@ -166,6 +166,25 @@ def multi_ps_plan(n_devices: int, per_device_dl_bps: float,
         within_envelope=demand / n_ps <= ps_capacity_bps)
 
 
+def island_boundaries(n_devices: int, n_ps: int) -> list:
+    """Contiguous ``[start, end)`` device-index ranges for ``n_ps`` islands:
+    the balanced split behind ``multi_ps_plan.per_ps_devices`` made exact —
+    island sizes differ by at most one, the first ``n_devices % n_ps``
+    islands carry the extra device, and the ranges tile ``[0, n_devices)``.
+    ``n_ps=1`` degenerates to the whole fleet."""
+    if n_ps < 1 or n_devices < n_ps:
+        raise ValueError(
+            f"island_boundaries: need 1 <= n_ps <= n_devices, "
+            f"got n_ps={n_ps}, n_devices={n_devices}")
+    base, extra = divmod(n_devices, n_ps)
+    out, start = [], 0
+    for i in range(n_ps):
+        size = base + (1 if i < extra else 0)
+        out.append((start, start + size))
+        start += size
+    return out
+
+
 # --------------------------------------------------------- energy model ----
 
 @dataclass

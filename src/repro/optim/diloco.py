@@ -15,6 +15,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import NamedTuple, Sequence
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
@@ -64,3 +66,90 @@ def communication_per_round(n_params: float, inner_steps: int,
     diloco = 2 * n_params * bytes_per_el      # pull new θ + push local θ
     return {"sync_bytes": sync, "diloco_bytes": diloco,
             "reduction_x": sync / diloco}
+
+
+# ------------------------------------------------- PS-sharded outer state --
+
+class ParamPartition(NamedTuple):
+    """Leaf-wise assignment of the parameter tree to K PS shards: shard k
+    *owns* its leaves' outer state (anchor + velocity) and reduces them at
+    round boundaries.  The outer update is elementwise per leaf, so the
+    sharded round is numerically identical to the monolithic one — the
+    partition only decides *where* each reduction happens and therefore
+    what crosses the PS-to-PS links."""
+    shard_of: tuple                # leaf index -> owning shard
+    shard_bytes: tuple             # per-shard owned bytes
+    n_shards: int
+
+
+def partition_params(params, n_shards: int) -> ParamPartition:
+    """Greedy size-balanced leaf assignment over the stable
+    ``jax.tree.flatten`` order (largest leaves first onto the lightest
+    shard) — deterministic for a given tree structure."""
+    leaves = jax.tree.leaves(params)
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    sizes = [float(np.prod(l.shape) * l.dtype.itemsize) if hasattr(l, "shape")
+             else float(np.asarray(l).nbytes) for l in leaves]
+    shard_of = [0] * len(leaves)
+    loads = [0.0] * n_shards
+    for i in sorted(range(len(leaves)), key=lambda i: (-sizes[i], i)):
+        k = min(range(n_shards), key=lambda j: (loads[j], j))
+        shard_of[i] = k
+        loads[k] += sizes[i]
+    return ParamPartition(shard_of=tuple(shard_of),
+                          shard_bytes=tuple(loads), n_shards=n_shards)
+
+
+def sync_traffic(part: ParamPartition, n_islands: int = None) -> dict:
+    """Cross-PS traffic of one sharded outer round: every island PS sends
+    its local copy of shard k to its owner (reduce) and receives the
+    updated shard back (gather), so PS k moves
+    ``(K-1)·P_k + (T-P_k)`` bytes each way.  For equal partitions this is
+    the familiar ``2·(K-1)/K·T`` all-reduce volume per PS."""
+    k_i = n_islands if n_islands is not None else part.n_shards
+    total = float(sum(part.shard_bytes))
+    per_ps = [float((k_i - 1) * p + (total - p)) for p in part.shard_bytes]
+    return {"per_ps_bytes": per_ps, "total_bytes": float(sum(per_ps)),
+            "param_bytes": total}
+
+
+def outer_step_sharded(state: OuterState, group_params: Sequence,
+                       part: ParamPartition,
+                       cfg: DiLoCoConfig = DiLoCoConfig()):
+    """The PS-sharded outer round: each shard applies :func:`outer_step`'s
+    elementwise update to the leaves it owns, then the updated shards
+    all-gather back onto every island.  Returns
+    ``(new_params, new_state, traffic)`` where ``new_params``/``new_state``
+    are **bit-identical** to the monolithic :func:`outer_step` (asserted in
+    tests) and ``traffic`` is :func:`sync_traffic` for this partition."""
+    treedef = jax.tree.structure(group_params[0])
+    n_leaves = treedef.num_leaves
+    if len(part.shard_of) != n_leaves:
+        raise ValueError(
+            f"partition covers {len(part.shard_of)} leaves, params have "
+            f"{n_leaves} — repartition after any arch change")
+    # per-shard application: gather each shard's leaf lists, run the same
+    # elementwise update, scatter back in flatten order
+    g_leaves = [jax.tree.leaves(g) for g in group_params]
+    v_leaves = jax.tree.leaves(state.velocity)
+    a_leaves = jax.tree.leaves(state.anchor)
+    new_p = [None] * n_leaves
+    new_v = [None] * n_leaves
+    new_anchor = [None] * n_leaves
+    n = float(len(group_params))
+    for k in range(part.n_shards):
+        for i in (j for j in range(n_leaves) if part.shard_of[j] == k):
+            mean = sum(g[i].astype(jnp.float32) for g in g_leaves) / n
+            delta = a_leaves[i] - mean
+            vel = cfg.outer_momentum * v_leaves[i] + delta
+            new = a_leaves[i] - cfg.outer_lr * (cfg.outer_momentum * vel
+                                                + delta)
+            new_v[i] = vel
+            new_anchor[i] = new              # anchor stays f32, like outer_step
+            new_p[i] = new.astype(g_leaves[0][i].dtype)
+    unflat = lambda ls: jax.tree.unflatten(treedef, ls)
+    traffic = sync_traffic(part, n_islands=len(group_params))
+    return (unflat(new_p),
+            OuterState(velocity=unflat(new_v), anchor=unflat(new_anchor)),
+            traffic)

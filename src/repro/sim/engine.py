@@ -13,11 +13,15 @@ directly:
 * ``overlapped`` items complete in ``max(T_DL + L_d, T_comp, T_UL + L_u)``
   (Eq. 2-4); ``pipeline`` items run ``k`` quanta through a three-stage
   one-in-flight-per-stage pipeline (Eq. 9');
-* all downloads share the PS egress link and all uploads the PS ingress
-  link: transfers acquire bandwidth FIFO, so a fleet whose aggregate link
-  rate exceeds the PS capacity queues (§6 single-PS envelope) — with
-  infinite capacity (the default) the engine reproduces the closed forms
-  exactly;
+* downloads share their parameter server's egress link and uploads its
+  ingress link: transfers acquire bandwidth FIFO, so a fleet whose
+  aggregate link rate exceeds the PS capacity queues (§6 single-PS
+  envelope) — with infinite capacity (the default) the engine reproduces
+  the closed forms exactly.  A ``ps_of`` device→shard map splits the
+  fleet across K independent PS link pairs (§6 multi-PS scale-out: each
+  island contends only on its own server), and ``price_outer_sync``
+  prices the island-sync round (the DiLoCo reduce+gather of sharded
+  outer state) on the same timeline;
 * :mod:`repro.sim.events` events are injected on the same heap:
   ``fail`` orphans a device's unfinished items and re-dispatches them via a
   pluggable ``repair`` hook (the schedule driver below uses
@@ -130,6 +134,7 @@ class TimelineEngine:
     def __init__(self, devices: Sequence[cm.Device], *,
                  ps_egress_bps: Optional[float] = None,
                  ps_ingress_bps: Optional[float] = None,
+                 ps_of: Optional[Dict[int, int]] = None,
                  events: Sequence[TimelineEvent] = (),
                  jitter_alpha: float = 0.0,
                  rng: Optional[np.random.Generator] = None,
@@ -141,8 +146,16 @@ class TimelineEngine:
                 f"jitter_alpha must be > 1 for a finite-mean Pareto tail "
                 f"(got {jitter_alpha}); pass 0 to disable jitter")
         self._devs: Dict[int, _Dev] = {d.device_id: _Dev(d) for d in devices}
-        self._egress = _Link(ps_egress_bps)
-        self._ingress = _Link(ps_ingress_bps)
+        # one egress/ingress link pair per parameter server: ``ps_of`` maps
+        # device_id -> PS shard index (absent devices — and joiners — fall
+        # back to shard 0, the single-PS default).  Every shard's links get
+        # the same capacity; None capacity = infinite (no contention).
+        self._ps_of: Dict[int, int] = dict(ps_of or {})
+        n_ps = max(self._ps_of.values(), default=0) + 1
+        self._egress: Dict[int, _Link] = {p: _Link(ps_egress_bps)
+                                          for p in range(n_ps)}
+        self._ingress: Dict[int, _Link] = {p: _Link(ps_ingress_bps)
+                                           for p in range(n_ps)}
         self._events = validate_events(list(events))
         self.jitter_alpha = float(jitter_alpha)
         self.rng = rng
@@ -239,10 +252,12 @@ class TimelineEngine:
             n_slowdowns=self._n_slow, recovery_latency=recovery,
             recomputed_fraction=self.recomputed_fraction,
             device_busy=dict(self._busy),
-            ps_egress_wait=self._egress.wait,
-            ps_ingress_wait=self._ingress.wait,
-            ps_egress_busy=self._egress.busy_bytes,
-            ps_ingress_busy=self._ingress.busy_bytes,
+            # aggregates over the per-PS links (single-PS: the one link)
+            ps_egress_wait=sum(l.wait for l in self._egress.values()),
+            ps_ingress_wait=sum(l.wait for l in self._ingress.values()),
+            ps_egress_busy=sum(l.busy_bytes for l in self._egress.values()),
+            ps_ingress_busy=sum(l.busy_bytes
+                                for l in self._ingress.values()),
             chain_completions=dict(self._completions),
             wall_time=time.perf_counter() - wall0, trace=self._trace)
 
@@ -275,6 +290,14 @@ class TimelineEngine:
         return it.setup + max(t_dl + it.dl_lat, t_c, t_ul + it.ul_lat)
 
     # --------------------------------------------------------- link tokens --
+
+    def _egress_of(self, device_id: int) -> _Link:
+        p = self._ps_of.get(device_id, 0)
+        return self._egress[p if p in self._egress else 0]
+
+    def _ingress_of(self, device_id: int) -> _Link:
+        p = self._ps_of.get(device_id, 0)
+        return self._ingress[p if p in self._ingress else 0]
 
     def _acquire(self, link: _Link, t: float, rate: float, dur: float,
                  device_id: int, cb: Callable) -> None:
@@ -314,7 +337,7 @@ class TimelineEngine:
             if g[3] and g[2] == device_id:
                 g[3] = False
                 g[0].in_use -= g[1]
-        for link in (self._egress, self._ingress):
+        for link in (*self._egress.values(), *self._ingress.values()):
             link.queue = deque(q for q in link.queue if q[3] != device_id)
             self._pump(link, t)
 
@@ -403,6 +426,8 @@ class TimelineEngine:
     def _exec_overlapped(self, ch: _Chain, it: WorkItem, s: float) -> None:
         dev = self._devs[ch.device_id]
         d, f = dev.device, dev.factor
+        egress = self._egress_of(ch.device_id)
+        ingress = self._ingress_of(ch.device_id)
         epoch = ch.epoch
         t_dl = self._draw(it.dl_bytes / d.dl_bw * f)
         t_c = self._draw(it.flops / d.flops * f)
@@ -412,11 +437,11 @@ class TimelineEngine:
             if ch.epoch != epoch or not dev.alive:
                 return
             c0 = g + max(t_dl + it.dl_lat, t_c, t_ul + it.ul_lat)
-            if it.ul_bytes > 0 and self._ingress.capacity is not None:
+            if it.ul_bytes > 0 and ingress.capacity is not None:
                 # the upload burst is modeled at the tail of the window
                 u0 = max(c0 - t_ul - it.ul_lat, g)
                 self._schedule(u0, lambda now: self._acquire(
-                    self._ingress, now, it.ul_bytes / max(t_ul, 1e-18),
+                    ingress, now, it.ul_bytes / max(t_ul, 1e-18),
                     t_ul, ch.device_id,
                     lambda gu: self._schedule(
                         gu + t_ul + it.ul_lat,
@@ -425,14 +450,14 @@ class TimelineEngine:
                 self._schedule(c0,
                                lambda now: self._item_done(ch, epoch, g, now))
 
-        if it.dl_bytes > 0 and self._egress.capacity is not None:
+        if it.dl_bytes > 0 and egress.capacity is not None:
             rate = it.dl_bytes / max(t_dl, 1e-18)
             if s > self.clock:      # honor setup delay before queueing
                 self._schedule(s, lambda now: self._acquire(
-                    self._egress, now, rate, t_dl, ch.device_id,
+                    egress, now, rate, t_dl, ch.device_id,
                     after_dl_grant))
             else:
-                self._acquire(self._egress, s, rate, t_dl, ch.device_id,
+                self._acquire(egress, s, rate, t_dl, ch.device_id,
                               after_dl_grant)
         else:
             after_dl_grant(s)
@@ -484,7 +509,8 @@ class TimelineEngine:
 
         rate = it.dl_bytes / it.k / max(t_dl, 1e-18)
         self._schedule(st["dl_free"], lambda now: self._acquire(
-            self._egress, now, rate, t_dl, ch.device_id, granted))
+            self._egress_of(ch.device_id), now, rate, t_dl, ch.device_id,
+            granted))
 
     def _pump_ul(self, ch: _Chain, it: WorkItem, epoch: int) -> None:
         st = ch.pstate
@@ -514,7 +540,8 @@ class TimelineEngine:
             else:
                 self._pump_ul(ch, it, epoch)
 
-        self._acquire(self._ingress, max(st["ul_free"], self.clock), rate,
+        self._acquire(self._ingress_of(ch.device_id),
+                      max(st["ul_free"], self.clock), rate,
                       t_ul, ch.device_id, granted)
 
     # ---------------------------------------------------- injected events --
@@ -816,6 +843,41 @@ def price_dataflow(nodes: Sequence[tuple], devices: Sequence[cm.Device],
                 chains_here.append((cid, a.r0, a.r1, g.m))
         node_chains[i] = chains_here
     return eng.run().makespan
+
+
+def price_outer_sync(shard_bytes: Sequence[float], *,
+                     ps_net_bps: float = 25e9,
+                     backbone_bps: Optional[float] = None,
+                     latency: float = 0.0) -> float:
+    """Price one DiLoCo island-sync round (the cross-PS event at an outer
+    boundary) on the engine timeline: each of the K parameter servers is a
+    pseudo-device that simultaneously streams its reduce+gather traffic —
+    ``(K-1)·P_k + (T-P_k)`` bytes each way for the shard partition
+    ``shard_bytes`` (``diloco.sync_traffic``).
+
+    With per-PS links of ``ps_net_bps`` (the default: each server's own
+    NIC), the round costs the slowest server's transfer; a finite
+    ``backbone_bps`` instead funnels every transfer through one shared
+    inter-PS backbone link, so the round queues FIFO exactly like §6 PS
+    saturation.  K=1 (or an empty partition) is free — there is nothing to
+    sync."""
+    k = len(shard_bytes)
+    if k <= 1:
+        return 0.0
+    total = float(sum(shard_bytes))
+    devs = [cm.Device(flops=1e30, dl_bw=ps_net_bps, ul_bw=ps_net_bps,
+                      dl_lat=latency, ul_lat=latency, device_id=i)
+            for i in range(k)]
+    # backbone contention: map every PS pseudo-device onto ONE shared link
+    # pair; otherwise each PS gets its own infinite link (NIC-bound).
+    eng = TimelineEngine(devs, ps_egress_bps=backbone_bps,
+                         ps_ingress_bps=backbone_bps,
+                         ps_of={i: 0 for i in range(k)})
+    for i, p in enumerate(shard_bytes):
+        xfer = (k - 1) * float(p) + (total - float(p))
+        eng.add_chain(i, [WorkItem(dl_bytes=xfer, flops=0.0, ul_bytes=xfer,
+                                   dl_lat=latency, ul_lat=latency)])
+    return float(eng.run().makespan)
 
 
 # ------------------------------------------------------ schedule simulation --

@@ -17,6 +17,11 @@ Layout
                 step with PS-hosted non-GEMM ops, fleet metrics (measured vs
                 ``engine.price_plan`` predicted makespan), and mid-step
                 failure injection that exercises ``churn.recover``.
+``multi_ps``    :class:`MultiPSTrainSession` — K parameter-server islands
+                (``api.ShardedFleet``), each a full ``FleetTrainSession``
+                over its own subfleet, synced every H inner steps by the
+                sharded DiLoCo outer loop (``optim.diloco``); PS failures
+                evict whole islands (docs/TRAINING.md).
 
 The package ``__init__`` is lazy (PEP 562) so that ``models.layers`` can
 import :mod:`repro.train_loop.hook` without dragging the runtime stack into
@@ -31,6 +36,9 @@ _LAZY = {
     "FleetTrainSession": "repro.train_loop.train_step",
     "make_fleet_train_step": "repro.train_loop.train_step",
     "price_request": "repro.train_loop.train_step",
+    "MultiPSState": "repro.train_loop.multi_ps",
+    "MultiPSStepReport": "repro.train_loop.multi_ps",
+    "MultiPSTrainSession": "repro.train_loop.multi_ps",
 }
 
 __all__ = sorted(_LAZY) + ["hook"]

@@ -215,12 +215,24 @@ class FleetTrainSession:
                  backend: str = "numpy", kernel: str = "auto",
                  dtype_policy=None, verify: bool = True,
                  q_chunk: int = 64, k_chunk: int = 64,
-                 loss_chunk: int = 64, dispatch: str = "level"):
+                 loss_chunk: int = 64, dispatch: str = "level",
+                 checkpoint=None, checkpoint_every: int = 100):
         from repro.optim import adam
         self.rt = runtime
         self.cfg = cfg if cfg is not None else runtime.cfg
         self.opt_cfg = opt_cfg or adam.AdamConfig()
         self.dispatch = dispatch
+        # periodic PS-side checkpoints (§6): a directory path builds a
+        # CheckpointManager(every=checkpoint_every); a manager passes
+        # through; None disables.  Snapshots are atomic npz of
+        # {"params", "opt_state"} keyed by completed-step count, so
+        # restore() resumes with the lr schedule intact (AdamState.step
+        # rides inside opt_state).
+        if isinstance(checkpoint, str):
+            from repro.checkpointing.checkpoint import CheckpointManager
+            checkpoint = CheckpointManager(checkpoint,
+                                           every=checkpoint_every)
+        self.checkpoint = checkpoint
         self.gemms = FleetGemmSession(runtime, backend=backend,
                                       kernel=kernel,
                                       dtype_policy=dtype_policy,
@@ -330,7 +342,29 @@ class FleetTrainSession:
             "predicted_makespan": report.predicted_makespan,
             "failed_ids": list(report.failed_ids)})
         self.step_index += 1
+        if self.checkpoint is not None:
+            self.checkpoint.maybe_save(
+                self.step_index, {"params": params2, "opt_state": opt2},
+                metadata={"loss": float(loss)})
         return params2, opt2, metrics
+
+    # ----------------------------------------------------------- restore --
+
+    def restore(self, params_like, opt_state_like):
+        """Resume from the newest checkpoint in the session's manager:
+        returns ``(params, opt_state, step)`` with ``step_index``
+        fast-forwarded so the resumed trajectory — losses, lr schedule,
+        checkpoint cadence — bit-matches the uninterrupted run (regression
+        test in ``tests/test_train_loop.py``).  With no snapshot on disk
+        the ``_like`` trees pass through at step 0."""
+        if self.checkpoint is None:
+            raise RuntimeError("session has no checkpoint manager")
+        step, tree = self.checkpoint.restore_latest(
+            {"params": params_like, "opt_state": opt_state_like})
+        if step is None:
+            return params_like, opt_state_like, 0
+        self.step_index = step
+        return tree["params"], tree["opt_state"], step
 
     # ----------------------------------------------------------- internals --
 

@@ -1,0 +1,379 @@
+"""Multi-PS sharded training (PS islands + sharded DiLoCo outer loop).
+
+Covers the full stack: deterministic device/param partitioning
+(``cost_model.partition_devices``, ``diloco.partition_params``), the
+bit-exactness of the PS-sharded outer round vs the monolithic one, the
+``ShardedFleet`` island algebra (disjointness, eviction, id preservation),
+per-PS link contention and ``price_outer_sync`` in the engine, and the
+``MultiPSTrainSession`` end to end: K=1/H=1 bit parity with the single-PS
+``train_session``, round-boundary syncs, checkpoint resume, and churn at
+both device and island granularity.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.api import CleaveRuntime, Fleet, PSGroup, ShardedFleet  # noqa: E402
+from repro.configs.base import get_config  # noqa: E402
+from repro.core import cost_model as cm  # noqa: E402
+from repro.data.pipeline import DataConfig, SyntheticLM  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.optim import adam, diloco  # noqa: E402
+from repro.sim.engine import TimelineEngine, WorkItem, price_outer_sync  # noqa: E402
+
+B, S = 2, 32
+CHUNKS = dict(q_chunk=16, k_chunk=16, loss_chunk=16)
+
+
+def _setup(seed=0, n_devices=8):
+    cfg = get_config("llama3-8b").reduced()
+    opt_cfg = adam.AdamConfig(lr=3e-4, warmup_steps=2, total_steps=20)
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adam.init(params, opt_cfg)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=S,
+                                  global_batch=B, seed=seed))
+    rt = CleaveRuntime(arch=cfg, fleet=Fleet.sample(n_devices, seed=seed))
+    return cfg, opt_cfg, params, opt, data, rt
+
+
+def _batch(data, step):
+    return {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+
+
+def _bit_equal(tree_a, tree_b):
+    la, lb = jax.tree.leaves(tree_a), jax.tree.leaves(tree_b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(a), np.asarray(b)) for a, b in zip(la, lb))
+
+
+# -------------------------------------------------- device partitioning --
+
+def test_partition_devices_k1_is_identity():
+    devs = Fleet.sample(8, seed=0).devices
+    parts = cm.partition_devices(devs, 1)
+    assert len(parts) == 1
+    assert [d.device_id for d in parts[0]] == [d.device_id for d in devs]
+
+
+def test_partition_devices_balances_flops():
+    devs = Fleet.sample(16, seed=1).devices
+    parts = cm.partition_devices(devs, 4)
+    assert sorted(d.device_id for p in parts for d in p) == \
+        sorted(d.device_id for d in devs)
+    loads = [sum(d.flops for d in p) for p in parts]
+    # greedy LPT: no island more than ~1.5x the lightest on a sampled fleet
+    assert max(loads) / min(loads) < 1.5
+    # deterministic
+    again = cm.partition_devices(devs, 4)
+    assert [[d.device_id for d in p] for p in parts] == \
+        [[d.device_id for d in p] for p in again]
+
+
+def test_partition_devices_rejects_bad_k():
+    devs = Fleet.sample(4, seed=0).devices
+    with pytest.raises(ValueError):
+        cm.partition_devices(devs, 0)
+    with pytest.raises(ValueError):
+        cm.partition_devices(devs, 5)
+
+
+# ------------------------------------------------- param partitioning ----
+
+def test_partition_params_covers_all_leaves_balanced():
+    params = {"a": jnp.zeros((64, 64)), "b": jnp.zeros((64,)),
+              "c": jnp.zeros((32, 64)), "d": jnp.zeros((8, 8))}
+    part = diloco.partition_params(params, 2)
+    assert part.n_shards == 2
+    assert len(part.shard_of) == 4
+    sizes = [float(np.prod(l.shape) * l.dtype.itemsize)
+             for l in jax.tree.leaves(params)]
+    assert sum(part.shard_bytes) == pytest.approx(sum(sizes))
+    # largest leaf alone on one shard, the rest on the other (LPT)
+    assert max(part.shard_bytes) / sum(sizes) < 0.75
+
+
+def test_sync_traffic_allreduce_volume():
+    # equal partition: per-PS traffic is 2 (K-1)/K T, total 2 (K-1) T
+    part = diloco.ParamPartition(shard_of=(0, 1, 2, 3),
+                                 shard_bytes=(100.0,) * 4, n_shards=4)
+    t = diloco.sync_traffic(part)
+    assert t["param_bytes"] == 400.0
+    for per_ps in t["per_ps_bytes"]:
+        assert per_ps == pytest.approx(2 * (3 / 4) * 400.0)
+    assert t["total_bytes"] == pytest.approx(2 * 3 * 400.0)
+
+
+def test_outer_step_sharded_bit_matches_monolithic():
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 8)
+    mk = lambda k, shape, dt: jax.random.normal(k, shape).astype(dt)
+    params = {"w": mk(ks[0], (16, 16), jnp.float32),
+              "e": mk(ks[1], (32, 8), jnp.bfloat16),
+              "n": {"g": mk(ks[2], (16,), jnp.float32)}}
+    groups = [jax.tree.map(
+        lambda p, i=i: p + (0.01 * (i + 1)) * jnp.ones_like(p), params)
+        for i in range(3)]
+    cfg = diloco.DiLoCoConfig(outer_lr=0.7, outer_momentum=0.9)
+    state = diloco.outer_init(params)
+    mono_p, mono_s = diloco.outer_step(state, groups, cfg)
+    for k in (1, 2, 3):
+        part = diloco.partition_params(params, k)
+        sh_p, sh_s, traffic = diloco.outer_step_sharded(
+            state, groups, part, cfg)
+        assert _bit_equal(mono_p, sh_p), k
+        assert _bit_equal(mono_s.velocity, sh_s.velocity), k
+        assert _bit_equal(mono_s.anchor, sh_s.anchor), k
+        assert traffic["param_bytes"] == pytest.approx(sum(part.shard_bytes))
+
+
+def test_outer_step_sharded_rejects_stale_partition():
+    params = {"a": jnp.zeros((4,)), "b": jnp.zeros((4,))}
+    part = diloco.ParamPartition(shard_of=(0,), shard_bytes=(16.0,),
+                                 n_shards=1)
+    with pytest.raises(ValueError):
+        diloco.outer_step_sharded(diloco.outer_init(params), [params],
+                                  part, diloco.DiLoCoConfig())
+
+
+# ------------------------------------------------------- sharded fleet ----
+
+def test_sharded_fleet_partition_disjoint_covering():
+    fleet = Fleet.sample(10, seed=2)
+    sf = ShardedFleet.partition(fleet, 3)
+    assert sf.n_ps == 3 and len(sf) == 10
+    ids = [did for g in sf for did in g.fleet.ids()]
+    assert sorted(ids) == sorted(fleet.ids())
+    pm = sf.ps_of()
+    assert set(pm.values()) == {0, 1, 2}
+    for k, g in enumerate(sf):
+        assert all(pm[did] == k for did in g.fleet.ids())
+        assert sf.group_of(next(iter(g.fleet.ids()))) is g
+
+
+def test_sharded_fleet_rejects_overlap():
+    fleet = Fleet.sample(4, seed=0)
+    g = PSGroup(ps_id=0, fleet=fleet)
+    with pytest.raises(ValueError):
+        ShardedFleet([g, PSGroup(ps_id=1, fleet=fleet)])
+
+
+def test_sharded_fleet_auto_sizing_clamps():
+    fleet = Fleet.sample(5, seed=0)
+    sf = ShardedFleet.partition(fleet, None)  # auto: small fleet -> 1 PS
+    assert 1 <= sf.n_ps <= 5
+    assert ShardedFleet.partition(fleet, 99).n_ps == 5  # clamped
+
+
+def test_without_ps_preserves_ids_and_balances():
+    sf = ShardedFleet.partition(Fleet.sample(9, seed=3), 3)
+    before = sorted(did for g in sf for did in g.fleet.ids())
+    sig0 = sf.signature()
+    dead = sf[1]
+    sf2, placements = sf.without_ps(1)
+    assert sf2.n_ps == 2 and len(sf2) == 9
+    assert sorted(did for g in sf2 for did in g.fleet.ids()) == before
+    assert len(placements) == len(dead)
+    assert {d.device_id for _, d in placements} == set(dead.fleet.ids())
+    assert sf2.signature() != sig0
+    # ps_of stays dense (0..K-1) after the eviction
+    assert set(sf2.ps_of().values()) == {0, 1}
+    with pytest.raises(KeyError):
+        sf2.without_ps(1)
+
+
+def test_without_ps_refuses_last_island():
+    sf = ShardedFleet.partition(Fleet.sample(4, seed=0), 1)
+    with pytest.raises(RuntimeError):
+        sf.without_ps(0)
+
+
+# ----------------------------------------------- engine: per-PS links ----
+
+def _two_dev_engine(ps_of, bps):
+    devs = [cm.Device(flops=1e30, dl_bw=1e9, ul_bw=1e9, dl_lat=0.0,
+                      ul_lat=0.0, device_id=i) for i in range(2)]
+    eng = TimelineEngine(devs, ps_egress_bps=bps, ps_of=ps_of)
+    for i in range(2):
+        eng.add_chain(i, [WorkItem(dl_bytes=1e9, flops=0.0, ul_bytes=0.0)])
+    return eng.run()
+
+
+def test_per_ps_links_split_vs_shared():
+    # both devices on one PS: the 0.5 GB/s egress link serializes the two
+    # 1 GB/s streams -> 2 s.  One PS each: both stream at once -> 1 s.
+    shared = _two_dev_engine({0: 0, 1: 0}, 0.5e9)
+    split = _two_dev_engine({0: 0, 1: 1}, 0.5e9)
+    assert shared.makespan == pytest.approx(2 * split.makespan, rel=1e-6)
+    assert shared.ps_egress_wait > 0.0
+    assert split.ps_egress_wait == pytest.approx(0.0)
+
+
+def test_engine_default_single_ps_unchanged():
+    # no ps_of: everyone shares link 0, exactly the old single-PS behavior
+    none = _two_dev_engine(None, 0.5e9)
+    explicit = _two_dev_engine({0: 0, 1: 0}, 0.5e9)
+    assert none.makespan == pytest.approx(explicit.makespan)
+
+
+def test_price_outer_sync_hand_check():
+    assert price_outer_sync([100.0]) == 0.0  # K=1: nothing to sync
+    # K=2, equal halves of T=2e9 bytes: each PS moves (K-1) P + (T-P) = T
+    # bytes each way; at a 1 GB/s NIC with full DL/UL overlap the round is
+    # T / (1 GB/s) = 2 s.
+    t = price_outer_sync([1e9, 1e9], ps_net_bps=1e9)
+    assert t == pytest.approx(2.0, rel=1e-6)
+    # a shared backbone at the same rate serializes the two PSs -> 2x
+    t_bb = price_outer_sync([1e9, 1e9], ps_net_bps=1e9, backbone_bps=1e9)
+    assert t_bb == pytest.approx(4.0, rel=1e-6)
+
+
+# ------------------------------------------------- session: end to end ----
+
+def test_k1_h1_bit_parity_with_single_ps():
+    from repro.optim.diloco import DiLoCoConfig
+    cfg, opt_cfg, params, opt, data, rt_a = _setup()
+    single = rt_a.train_session(opt_cfg, **CHUNKS)
+    *_, rt_b = _setup()
+    multi = rt_b.train_session(opt_cfg, n_ps=1,
+                               diloco=DiLoCoConfig(inner_steps=1), **CHUNKS)
+    assert type(multi).__name__ == "MultiPSTrainSession"
+    assert multi.n_islands == 1
+    st = multi.init(params, opt)
+    assert st.outer is None  # K=1 bypasses the outer loop entirely
+    p, o = params, opt
+    for step in range(2):
+        batch = _batch(data, step)
+        p, o, met_s = single.step(p, o, batch)
+        st, met_m = multi.step(st, batch)
+        assert float(met_s["loss"]) == float(met_m["loss"])
+        assert not met_m["multi_ps"].synced
+    assert _bit_equal(p, st.params)
+    assert _bit_equal(o.mu, st.opt_state.mu)
+    assert _bit_equal(o.nu, st.opt_state.nu)
+
+
+def test_k2_h2_syncs_at_round_boundary(tmp_path):
+    from repro.optim.diloco import DiLoCoConfig
+    cfg, opt_cfg, params, opt, data, rt = _setup()
+    sess = rt.train_session(
+        opt_cfg, n_ps=2, diloco=DiLoCoConfig(inner_steps=2, outer_lr=0.7),
+        checkpoint=str(tmp_path), checkpoint_every=2, **CHUNKS)
+    assert sess.n_islands == 2
+    assert [len(g) for g in sess.sharded] == [4, 4]
+    st = sess.init(params, opt)
+    data_b = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=S,
+                                    global_batch=B, seed=7))
+    st, m1 = sess.step(st, [_batch(data, 0), _batch(data_b, 0)])
+    rep1 = m1["multi_ps"]
+    assert not rep1.synced and rep1.round == 0
+    assert rep1.n_islands == 2 and len(rep1.island_loss) == 2
+    # distinct data shards -> the island replicas drift apart
+    assert not _bit_equal(st.island_params[0], st.island_params[1])
+    st, m2 = sess.step(st, [_batch(data, 1), _batch(data_b, 1)])
+    rep2 = m2["multi_ps"]
+    assert rep2.synced and rep2.round == 1
+    # after the outer round every island holds the merged replica
+    assert _bit_equal(st.island_params[0], st.island_params[1])
+    # cross-PS volume = 2 (K-1) param_bytes (diloco.sync_traffic)
+    part = diloco.partition_params(st.params, 2)
+    assert rep2.cross_ps_sync_bytes == pytest.approx(
+        2 * sum(part.shard_bytes))
+    assert rep2.predicted_sync_time > 0.0
+    assert rep2.predicted_makespan >= max(
+        r.predicted_makespan for r in rep2.island_reports)
+    assert np.isfinite(rep2.loss)
+    # checkpoint fired at the boundary; a fresh session resumes from it
+    sess2 = rt.train_session(
+        opt_cfg, n_ps=2, diloco=DiLoCoConfig(inner_steps=2, outer_lr=0.7),
+        checkpoint=str(tmp_path), **CHUNKS)
+    st_r, step_r = sess2.restore(sess2.init(params, opt))
+    assert step_r == 2 and st_r.round == 1
+    assert _bit_equal(st_r.island_params[0], st.island_params[0])
+    assert _bit_equal(st_r.outer.anchor, st.outer.anchor)
+
+
+def test_ps_failure_mid_round_recovers():
+    from repro.optim.diloco import DiLoCoConfig
+    cfg, opt_cfg, params, opt, data, rt = _setup()
+    sess = rt.train_session(
+        opt_cfg, n_ps=2, diloco=DiLoCoConfig(inner_steps=2), **CHUNKS)
+    st = sess.init(params, opt)
+    n_devices = len(sess.sharded)
+    st, _ = sess.step(st, _batch(data, 0))
+    # PS 1 dies mid-round: island evicted, devices fold into PS 0.  The
+    # per-island batch list is sized for the islands alive at the step's
+    # start — the dead island's shard is dropped with it.
+    st, met = sess.step(st, [_batch(data, 1), _batch(data, 9)], fail_ps=1)
+    rep = met["multi_ps"]
+    assert rep.evicted_ps == 1 and rep.n_devices_reassigned == 4
+    assert rep.n_islands == 1 and sess.n_islands == 1
+    assert len(sess.sharded) == n_devices  # no device lost
+    assert len(sess.islands[0].rt.fleet) == n_devices
+    assert st.n_islands == 1
+    for leaf in jax.tree.leaves(st.params):
+        assert np.isfinite(np.asarray(leaf, dtype=np.float32)).all()
+    # the survivor keeps training over the enlarged subfleet
+    st, met = sess.step(st, _batch(data, 2))
+    assert np.isfinite(met["loss"])
+    with pytest.raises(KeyError):
+        sess.step(st, _batch(data, 3), fail_ps=1)
+
+
+def test_device_failure_inside_island():
+    from repro.optim.diloco import DiLoCoConfig
+    cfg, opt_cfg, params, opt, data, rt = _setup()
+    sess = rt.train_session(
+        opt_cfg, n_ps=2, diloco=DiLoCoConfig(inner_steps=2), **CHUNKS)
+    st = sess.init(params, opt)
+    victim = next(iter(sess.sharded[1].fleet.ids()))
+    st, met = sess.step(st, _batch(data, 0), fail_ids=[victim],
+                        fail_island=1, fail_at_gemm=2)
+    assert np.isfinite(met["loss"])
+    # the island's own churn path evicted the device; island 0 untouched
+    assert victim not in sess.islands[1].rt.fleet.ids()
+    assert len(sess.islands[0].rt.fleet) == 4
+
+
+def test_batch_count_mismatch_rejected():
+    from repro.optim.diloco import DiLoCoConfig
+    cfg, opt_cfg, params, opt, data, rt = _setup()
+    sess = rt.train_session(
+        opt_cfg, n_ps=2, diloco=DiLoCoConfig(inner_steps=2), **CHUNKS)
+    st = sess.init(params, opt)
+    with pytest.raises(ValueError):
+        sess.step(st, [_batch(data, 0)] * 3)
+
+
+@pytest.mark.slow
+def test_k2_h2_converges_on_toy_config():
+    from repro.optim.diloco import DiLoCoConfig
+    cfg, _, params, _, data, rt = _setup()
+    opt_cfg = adam.AdamConfig(lr=1e-3, warmup_steps=1, total_steps=40)
+    opt = adam.init(params, opt_cfg)
+    sess = rt.train_session(
+        opt_cfg, n_ps=2, diloco=DiLoCoConfig(inner_steps=2, outer_lr=0.7),
+        **CHUNKS)
+    st = sess.init(params, opt)
+    data_b = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=S,
+                                    global_batch=B, seed=11))
+    losses = []
+    for step in range(6):
+        st, met = sess.step(st, [_batch(data, step), _batch(data_b, step)])
+        losses.append(met["loss"])
+    assert st.round == 3
+    assert np.mean(losses[-2:]) < np.mean(losses[:2])
+
+
+@pytest.mark.slow
+def test_k2_jax_backend_smoke():
+    from repro.optim.diloco import DiLoCoConfig
+    cfg, opt_cfg, params, opt, data, rt = _setup()
+    sess = rt.train_session(
+        opt_cfg, n_ps=2, diloco=DiLoCoConfig(inner_steps=1),
+        backend="jax", kernel="xla", **CHUNKS)
+    st = sess.init(params, opt)
+    st, met = sess.step(st, _batch(data, 0))
+    assert met["multi_ps"].synced  # H=1: every step is a round boundary
+    assert np.isfinite(met["loss"])

@@ -100,6 +100,41 @@ def test_multi_ps_single_device_fleet():
     assert one.per_ps_demand_gbps == pytest.approx(55e6 * 0.1 / 1e9)
 
 
+def test_island_boundaries_hand_cases():
+    """The exact island split behind ``multi_ps_plan.per_ps_devices``:
+    10 devices over 3 islands -> 4+3+3, extra devices on the first
+    ``n % k`` islands, ranges tiling [0, n)."""
+    assert streaming.island_boundaries(10, 3) == [(0, 4), (4, 7), (7, 10)]
+    assert streaming.island_boundaries(8, 4) == [(0, 2), (2, 4), (4, 6),
+                                                 (6, 8)]
+    assert streaming.island_boundaries(7, 2) == [(0, 4), (4, 7)]
+    # sizes differ by at most one and tile the fleet
+    for n, k in [(100, 7), (13, 13), (5, 2)]:
+        bounds = streaming.island_boundaries(n, k)
+        sizes = [e - s for s, e in bounds]
+        assert sum(sizes) == n and max(sizes) - min(sizes) <= 1
+        assert bounds[0][0] == 0 and bounds[-1][1] == n
+        assert all(bounds[i][1] == bounds[i + 1][0]
+                   for i in range(k - 1))
+
+
+def test_island_boundaries_degenerate_and_errors():
+    assert streaming.island_boundaries(6, 1) == [(0, 6)]  # K=1: whole fleet
+    assert streaming.island_boundaries(3, 3) == [(0, 1), (1, 2), (2, 3)]
+    with pytest.raises(ValueError):
+        streaming.island_boundaries(4, 0)
+    with pytest.raises(ValueError):
+        streaming.island_boundaries(2, 3)
+
+
+def test_island_boundaries_consistent_with_plan():
+    """``island_boundaries`` realizes the per-PS headcount the envelope
+    planner promises: no island exceeds ``per_ps_devices``."""
+    plan = streaming.multi_ps_plan(1001, 2.5e8, ps_capacity_bps=25e9)
+    bounds = streaming.island_boundaries(1001, plan.n_ps)
+    assert max(e - s for s, e in bounds) == plan.per_ps_devices
+
+
 def test_energy_model_matches_paper_band():
     """§6 companion analysis: 1.5-5x energy advantage, 3.5-6x carbon."""
     est = streaming.energy_comparison(total_flops=1e19, n_devices=512,

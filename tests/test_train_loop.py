@@ -188,6 +188,60 @@ def test_session_reuse_and_price_caching():
         == session.reports[1].predicted_makespan
 
 
+# ------------------------------------------------------------- checkpoint ---
+
+def test_checkpoint_save_restore_resume_bit_matches(tmp_path):
+    """Kill-and-resume regression: train 2 steps with periodic PS-side
+    checkpoints, restore in a fresh session, resume 2 more — the resumed
+    trajectory (losses, lr schedule via the Adam step counter, final
+    parameters) must bit-match the uninterrupted 4-step run."""
+    cfg, opt_cfg, params, opt, data, rt = _setup()
+    ref = rt.train_session(opt_cfg, **CHUNKS)
+    p_r, o_r = params, opt
+    ref_losses = []
+    for step in range(4):
+        p_r, o_r, met = ref.step(p_r, o_r, _batch(data, step))
+        ref_losses.append(float(met["loss"]))
+
+    # session A: checkpoint every 2 steps, killed after step 2
+    *_, rt_a = _setup()
+    sess_a = rt_a.train_session(opt_cfg, checkpoint=str(tmp_path),
+                                checkpoint_every=2, **CHUNKS)
+    p, o = params, opt
+    for step in range(2):
+        p, o, met = sess_a.step(p, o, _batch(data, step))
+        assert float(met["loss"]) == ref_losses[step]
+    assert sess_a.checkpoint.steps() == [2]
+
+    # session B: fresh process, restores the snapshot and resumes
+    *_, rt_b = _setup()
+    sess_b = rt_b.train_session(opt_cfg, checkpoint=str(tmp_path),
+                                checkpoint_every=2, **CHUNKS)
+    p2, o2, step0 = sess_b.restore(params, opt)
+    assert step0 == 2 and sess_b.step_index == 2
+    assert all(np.array_equal(np.asarray(a), np.asarray(b)) for a, b in
+               zip(jax.tree.leaves(p), jax.tree.leaves(p2)))
+    for step in range(2, 4):
+        p2, o2, met = sess_b.step(p2, o2, _batch(data, step))
+        assert float(met["loss"]) == ref_losses[step]
+    assert all(np.array_equal(np.asarray(a), np.asarray(b)) for a, b in
+               zip(jax.tree.leaves(p_r), jax.tree.leaves(p2)))
+    assert all(np.array_equal(np.asarray(a), np.asarray(b)) for a, b in
+               zip(jax.tree.leaves(o_r), jax.tree.leaves(o2)))
+    # the resumed session kept the cadence: next boundary saved at step 4
+    assert sess_b.checkpoint.steps() == [2, 4]
+
+
+def test_checkpoint_restore_empty_dir_passes_through(tmp_path):
+    cfg, opt_cfg, params, opt, data, rt = _setup()
+    sess = rt.train_session(opt_cfg, checkpoint=str(tmp_path), **CHUNKS)
+    p, o, step = sess.restore(params, opt)
+    assert step == 0 and p is params and o is opt
+    bare = rt.train_session(opt_cfg, **CHUNKS)
+    with pytest.raises(RuntimeError):
+        bare.restore(params, opt)
+
+
 # ------------------------------------------------------------------- slow ---
 
 @pytest.mark.slow
