@@ -74,6 +74,7 @@ def bench_core(matrix=MATRIX, include_kernels: bool = False) -> dict:
         "min_plan_cache_speedup_x": min_speedup,
         "plan_cache_ok": bool(min_speedup >= MIN_CACHE_SPEEDUP),
         "event_engine": bench_event_engine(),
+        "engine_array": bench_engine_array(),
         "executor": bench_executor(),
         "fleet_train": bench_fleet_train(),
         "fleet_train_multi_ps": bench_fleet_train_multi_ps(),
@@ -473,6 +474,89 @@ def bench_event_engine(arch: str = "opt-13b", n_devices: int = 64,
     }
 
 
+# devices / DAG levels / items per chain for the engine_array fleet-scaling
+# rows; the 1M row runs a shorter batch so the whole bench stays ~15 s
+ENGINE_ARRAY_SCALES = (
+    (10_000, 6, 3),
+    (100_000, 6, 3),
+    (1_000_000, 3, 2),
+)
+
+
+def bench_engine_array(arch: str = "opt-13b", n_devices: int = 64,
+                       batch: int = 16, seq: int = 256,
+                       scales=ENGINE_ARRAY_SCALES) -> dict:
+    """Throughput + fidelity of the struct-of-arrays engine
+    (``sim.engine_array``): a 64-device parity row against the scalar
+    oracle on the eventful schedule replay, then fleet-scaling rows
+    (churn + per-PS islands with finite links, proven-uncontended) at
+    10k/100k/1M devices via :meth:`add_chains_bulk`."""
+    import numpy as np
+
+    from repro.api import CleaveRuntime, Fleet, fail, slowdown
+    from repro.core.cost_model import Device
+    from repro.sim import events as ev
+    from repro.sim.engine_array import ArrayTimelineEngine
+
+    # --- parity: identical TimelineReport on the real schedule replay ----
+    rt = CleaveRuntime(arch=arch, fleet=Fleet.sample(n_devices, seed=0))
+    det = rt.simulate(batch, seq, backend="event")
+    victim = rt.fleet.devices[1].device_id
+    evs = [fail(det.makespan * 0.3, victim),
+           slowdown(det.makespan * 0.1, rt.fleet.devices[2].device_id, 4.0)]
+    sca = rt.simulate(batch, seq, backend="event", events=evs)
+    arr = rt.simulate(batch, seq, backend="event-array", events=evs)
+    rel = max(abs(sca.makespan - arr.makespan) / max(sca.makespan, 1e-12),
+              abs(sca.recovery_latency - arr.recovery_latency)
+              / max(sca.recovery_latency, 1e-12))
+
+    # --- fleet-scaling rows ----------------------------------------------
+    island = 64
+    rows = []
+    for n, n_levels, ipc in scales:
+        rng = np.random.default_rng(7)
+        devs = [Device(flops=float(f), dl_bw=float(dl), ul_bw=float(ul),
+                       device_id=i)
+                for i, (f, dl, ul) in enumerate(zip(
+                    rng.uniform(0.5e12, 4e12, n),
+                    rng.uniform(2e7, 2e8, n),
+                    rng.uniform(1e7, 1e8, n)))]
+        eng = ArrayTimelineEngine(
+            devs,
+            # island links sized just above the per-chain peak-rate sum,
+            # so FIFO admission is contended-but-provably-uncontended
+            ps_egress_bps=2e8 * island * 1.1,
+            ps_ingress_bps=1e8 * island * 1.1,
+            ps_of={i: i // island for i in range(n)},
+            events=[ev.fail(0.05, device_id=3),
+                    ev.slowdown(0.07, device_id=11, factor=2.0),
+                    ev.fail(0.2, device_id=n // 2)])
+        dids = np.arange(n)
+        wl = np.random.default_rng(11)
+        for lv in range(n_levels):
+            eng.add_chains_bulk(dids,
+                                wl.uniform(1e5, 1e6, n),
+                                wl.uniform(1e8, 1e9, n),
+                                wl.uniform(5e4, 5e5, n),
+                                dl_lat=0.001, ul_lat=0.002,
+                                level=lv, items_per_chain=ipc)
+        rep = eng.run()
+        rows.append({
+            "devices": n, "levels": n_levels, "items_per_chain": ipc,
+            "backend": rep.backend, "n_events": rep.n_events,
+            "sim_wall_s": round(rep.wall_time, 4),
+            "events_per_sec": round(rep.events_per_sec),
+            "n_failures": rep.n_failures,
+        })
+    return {
+        "parity_rel": rel,
+        "parity_ok": bool(rel < 1e-9),
+        # gated metric: the 10k-device row (acceptance floor 1M ev/s)
+        "events_per_sec": rows[0]["events_per_sec"],
+        "rows": rows,
+    }
+
+
 # ------------------------------------------------------- regression gate --
 
 # fresh-vs-baseline tolerance: a metric may be up to 1.25x worse than the
@@ -511,6 +595,13 @@ def check_against_baseline(baseline: dict, fresh: dict,
     if f_ee is not None:
         ok = b_ee is None or f_ee >= b_ee / tolerance
         out.append(("events_per_sec", b_ee, f_ee, ok))
+    b_ea = baseline.get("engine_array", {}).get("events_per_sec")
+    f_ea = fresh.get("engine_array", {}).get("events_per_sec")
+    if f_ea is not None:
+        ok = b_ea is None or f_ea >= b_ea / tolerance
+        out.append(("engine_array.events_per_sec", b_ea, f_ea, ok))
+        par = fresh.get("engine_array", {}).get("parity_ok")
+        out.append(("engine_array.parity_ok", True, par, bool(par)))
     b_x = baseline.get("executor", {}).get("min_jax_vs_numpy_x")
     f_x = fresh.get("executor", {}).get("min_jax_vs_numpy_x")
     if f_x is not None:
@@ -601,6 +692,12 @@ def main(out_path: str = "BENCH_core.json",
           f"({ee['events_per_sec']:,} ev/s), analytic match "
           f"{'OK' if ee['analytic_match_ok'] else 'FAIL: event backend '}"
           f"{'' if ee['analytic_match_ok'] else 'diverged from analytic'}")
+    ea = payload["engine_array"]
+    for r in ea["rows"]:
+        print(f"engine-array/D={r['devices']:,}: {r['n_events']:,} events "
+              f"in {r['sim_wall_s']}s ({r['events_per_sec']:,} ev/s)")
+    print(f"engine-array parity vs scalar: rel={ea['parity_rel']:.2e} "
+          f"{'OK' if ea['parity_ok'] else 'FAIL (diverged beyond 1e-9)'}")
     ex = payload["executor"]
     for r in ex["shapes"]:
         print(f"executor/{r['m']}x{r['n']}x{r['q']}/D={r['devices']}: "

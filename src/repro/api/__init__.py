@@ -21,11 +21,13 @@ from repro.api.ps_group import PSGroup, ShardedFleet
 from repro.api.runtime import (BatchExecuteReport, ChurnReport,
                                CleaveRuntime, LevelReport, PlanReport,
                                PlanRequest, StepReport, StreamReport)
+from repro.sim.engine_array import ArrayTimelineEngine
 from repro.sim.events import (FailEvent, JoinEvent, SlowdownEvent,
                               TimelineReport, fail, join, slowdown)
 
 __all__ = [
-    "AccountingResult", "AccountingStrategy", "BatchExecuteReport",
+    "AccountingResult", "AccountingStrategy", "ArrayTimelineEngine",
+    "BatchExecuteReport",
     "BroadcastAccounting", "ChurnReport", "CleaveRuntime", "CodedMitigation",
     "FailEvent", "Fleet", "JoinEvent", "LevelReport", "MitigationPolicy",
     "MitigationReport", "NoMitigation", "PSGroup", "PlanReport",

@@ -156,7 +156,8 @@ class TimelineEngine:
                                           for p in range(n_ps)}
         self._ingress: Dict[int, _Link] = {p: _Link(ps_ingress_bps)
                                            for p in range(n_ps)}
-        self._events = validate_events(list(events))
+        self._events = validate_events(list(events),
+                                       device_ids=set(self._devs))
         self.jitter_alpha = float(jitter_alpha)
         self.rng = rng
         self._repair = repair
@@ -731,15 +732,18 @@ def plan_chains(g: cm.GEMM, plan: cm.Plan, by_id: Dict[int, cm.Device],
 
 
 def price_plan(g: cm.GEMM, plan: cm.Plan, devices: Sequence[cm.Device],
-               n_pool: Optional[int] = None, overlap: bool = False) -> float:
+               n_pool: Optional[int] = None, overlap: bool = False,
+               engine_cls: type = None) -> float:
     """Deterministically price one plan's makespan through the engine (the
     single replacement for the per-level closed forms that used to be
     duplicated across ``simulator``, ``streaming``, and ``mitigation``).
     ``overlap=True`` prices the dataflow dispatch of the same plan:
     repeated rounds stream as pipeline quanta instead of serialized
-    latency-paying items (see :func:`plan_chains`)."""
+    latency-paying items (see :func:`plan_chains`).  ``engine_cls`` swaps
+    the simulation backend (default: this module's scalar oracle;
+    ``sim.engine_array.ArrayTimelineEngine`` is the vectorized twin)."""
     by_id = {d.device_id: d for d in devices}
-    eng = TimelineEngine(devices)
+    eng = (engine_cls or TimelineEngine)(devices)
     for did, items in plan_chains(g, plan, by_id, n_pool or len(devices),
                                   overlap=overlap):
         eng.add_chain(did, items, level=0)
@@ -748,7 +752,8 @@ def price_plan(g: cm.GEMM, plan: cm.Plan, devices: Sequence[cm.Device],
 
 def price_dataflow(nodes: Sequence[tuple], devices: Sequence[cm.Device],
                    *, deps: Optional[Sequence[Sequence[int]]] = None,
-                   n_pool: Optional[int] = None) -> float:
+                   n_pool: Optional[int] = None,
+                   engine_cls: type = None) -> float:
     """Critical-path makespan of dependent GEMMs under dataflow dispatch —
     the ready-set replacement for Eq. 1's sum-of-level-maxima.
 
@@ -768,7 +773,7 @@ def price_dataflow(nodes: Sequence[tuple], devices: Sequence[cm.Device],
     level."""
     by_id = {d.device_id: d for d in devices}
     pool = n_pool or len(devices)
-    eng = TimelineEngine(devices)
+    eng = (engine_cls or TimelineEngine)(devices)
     # topological order via Kahn's algorithm: callers hand nodes in model
     # order, which need not resolve dependencies left-to-right (a DAG's
     # backward mirrors are appended in forward order with descending levels)
@@ -848,7 +853,8 @@ def price_dataflow(nodes: Sequence[tuple], devices: Sequence[cm.Device],
 def price_outer_sync(shard_bytes: Sequence[float], *,
                      ps_net_bps: float = 25e9,
                      backbone_bps: Optional[float] = None,
-                     latency: float = 0.0) -> float:
+                     latency: float = 0.0,
+                     engine_cls: type = None) -> float:
     """Price one DiLoCo island-sync round (the cross-PS event at an outer
     boundary) on the engine timeline: each of the K parameter servers is a
     pseudo-device that simultaneously streams its reduce+gather traffic —
@@ -870,9 +876,9 @@ def price_outer_sync(shard_bytes: Sequence[float], *,
             for i in range(k)]
     # backbone contention: map every PS pseudo-device onto ONE shared link
     # pair; otherwise each PS gets its own infinite link (NIC-bound).
-    eng = TimelineEngine(devs, ps_egress_bps=backbone_bps,
-                         ps_ingress_bps=backbone_bps,
-                         ps_of={i: 0 for i in range(k)})
+    eng = (engine_cls or TimelineEngine)(
+        devs, ps_egress_bps=backbone_bps, ps_ingress_bps=backbone_bps,
+        ps_of={i: 0 for i in range(k)})
     for i, p in enumerate(shard_bytes):
         xfer = (k - 1) * float(p) + (total - float(p))
         eng.add_chain(i, [WorkItem(dl_bytes=xfer, flops=0.0, ul_bytes=xfer,
@@ -890,7 +896,8 @@ def simulate_schedule(sp, devices: Optional[Sequence[cm.Device]] = None, *,
                       rng: Optional[np.random.Generator] = None,
                       opt_tail: Optional[float] = None,
                       heterogeneity_aware: bool = True,
-                      trace: bool = False) -> TimelineReport:
+                      trace: bool = False,
+                      engine_cls: type = None) -> TimelineReport:
     """Replay a solved :class:`~repro.core.scheduler.SchedulePlan` on the
     event timeline.  With no events, no jitter, and infinite PS links this
     reproduces the analytic ``sp.batch_time`` exactly (asserted in tests);
@@ -976,10 +983,11 @@ def simulate_schedule(sp, devices: Optional[Sequence[cm.Device]] = None, *,
                         specs.append((li, did, list(items)))
         eng.replace_future_chains(specs)
 
-    eng = TimelineEngine(devices, ps_egress_bps=ps_egress_bps,
-                         ps_ingress_bps=ps_ingress_bps, events=events,
-                         jitter_alpha=jitter_alpha, rng=rng,
-                         repair=_repair, on_join=_on_join, trace=trace)
+    eng = (engine_cls or TimelineEngine)(
+        devices, ps_egress_bps=ps_egress_bps,
+        ps_ingress_bps=ps_ingress_bps, events=events,
+        jitter_alpha=jitter_alpha, rng=rng,
+        repair=_repair, on_join=_on_join, trace=trace)
     for li, level in enumerate(levels):
         # same-shape GEMMs at one level share a plan and stream as one pass
         # (the analytic level time is the max over unique shapes, Eq. 1)

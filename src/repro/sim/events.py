@@ -18,7 +18,7 @@ See ``docs/SIMULATION.md`` for the event → paper-section mapping.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Dict, List, Optional, Sequence, Set, Union
 
 from repro.core.cost_model import Device
 
@@ -69,9 +69,29 @@ def slowdown(t: float, device_id: int, factor: float) -> SlowdownEvent:
                          factor=float(factor))
 
 
-def validate_events(events: Sequence[TimelineEvent]) -> List[TimelineEvent]:
+def validate_events(events: Sequence[TimelineEvent],
+                    device_ids: Optional[Set[int]] = None
+                    ) -> List[TimelineEvent]:
     """Type/time check an event list and return it sorted by time (stable,
-    so same-time events keep their injection order)."""
+    so same-time events keep their injection order).
+
+    Rejections (all before any simulation starts, so a bad scenario fails
+    loudly instead of deep inside the replay loop):
+
+    * non-event objects (``TypeError``),
+    * negative event times,
+    * two ``FailEvent``\\ s for the same device at the same instant — the
+      second can never fire (the device is already dead) and almost always
+      indicates a scenario-construction bug,
+    * with ``device_ids`` (the fleet known to the engine): a fail/slowdown
+      targeting a device that is neither in the fleet nor introduced by a
+      ``JoinEvent`` in the same script.
+    """
+    known = None
+    if device_ids is not None:
+        known = set(device_ids) | {e.device.device_id for e in events
+                                   if isinstance(e, JoinEvent)}
+    seen_fails: Set[tuple] = set()
     for e in events:
         if not isinstance(e, (FailEvent, JoinEvent, SlowdownEvent)):
             raise TypeError(
@@ -79,6 +99,18 @@ def validate_events(events: Sequence[TimelineEvent]) -> List[TimelineEvent]:
                 "sim.events.fail/join/slowdown")
         if e.t < 0:
             raise ValueError(f"event time must be >= 0, got {e!r}")
+        if isinstance(e, FailEvent):
+            key = (e.t, e.device_id)
+            if key in seen_fails:
+                raise ValueError(
+                    f"duplicate simultaneous fail for device {e.device_id} "
+                    f"at t={e.t}: a device can only fail once per instant")
+            seen_fails.add(key)
+        if known is not None and isinstance(e, (FailEvent, SlowdownEvent)) \
+                and e.device_id not in known:
+            raise ValueError(
+                f"{e!r} targets unknown device {e.device_id}: not in the "
+                f"engine fleet and not introduced by any join event")
     return sorted(events, key=lambda e: e.t)
 
 

@@ -1,0 +1,407 @@
+"""Differential oracle suite for the struct-of-arrays event engine.
+
+``sim.engine_array.ArrayTimelineEngine`` must reproduce the scalar
+``sim.engine.TimelineEngine`` TimelineReport to <=1e-9 on every scenario —
+scripted micro-scenarios, seeded random sweeps, and (when hypothesis is
+installed) a property sweep whose example budget scales with the
+``REPRO_HYP_MAX_EXAMPLES`` env var (tier-1 keeps the fast default; the
+nightly CI job raises it).  ``n_events``, ``wall_time``, ``backend`` and
+``trace`` are backend metadata and excluded from the contract.
+"""
+import math
+import os
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.api import CleaveRuntime, Fleet, fail, join, slowdown
+from repro.core.cost_model import Device
+from repro.sim import events as ev_mod
+from repro.sim.engine import TimelineEngine, WorkItem
+from repro.sim.engine_array import ArrayTimelineEngine, _LazyMap
+
+HYP_MAX_EXAMPLES = int(os.environ.get("REPRO_HYP_MAX_EXAMPLES", "25"))
+
+# TimelineReport fields under the <=1e-9 differential contract (n_events,
+# wall_time, backend and trace are backend metadata)
+SEMANTIC_FIELDS = (
+    "makespan", "gemm_time", "opt_tail", "level_times", "n_items",
+    "n_failures", "n_joins", "n_slowdowns", "recovery_latency",
+    "recomputed_fraction", "ps_egress_wait", "ps_ingress_wait",
+    "ps_egress_busy", "ps_ingress_busy",
+)
+
+
+def assert_reports_match(scalar, arr, tol=1e-9):
+    __tracebackhide__ = True
+    for f in SEMANTIC_FIELDS:
+        a, b = getattr(scalar, f), getattr(arr, f)
+        if isinstance(a, list):
+            assert len(a) == len(b), f"{f}: length {len(a)} != {len(b)}"
+            np.testing.assert_allclose(a, b, rtol=tol, atol=tol,
+                                       err_msg=f)
+        else:
+            assert math.isclose(a, b, rel_tol=tol, abs_tol=tol), \
+                f"{f}: scalar={a!r} array={b!r}"
+    for name in ("device_busy", "chain_completions"):
+        d1, d2 = getattr(scalar, name), getattr(arr, name)
+        assert set(d1) == set(d2), \
+            f"{name} key mismatch: {sorted(set(d1) ^ set(d2))[:8]}"
+        for k in d1:
+            assert math.isclose(d1[k], d2[k], rel_tol=tol, abs_tol=tol), \
+                f"{name}[{k}]: scalar={d1[k]!r} array={d2[k]!r}"
+
+
+def mkdev(i, flops=1e12, dl=1e8, ul=5e7):
+    return Device(flops=flops, dl_bw=dl, ul_bw=ul, dl_lat=0.0, ul_lat=0.0,
+                  device_id=i)
+
+
+def random_scenario(seed):
+    """One seeded scenario: fleet (het or not), chains over a few levels,
+    a random fail/join/slowdown script, optional PS caps / islands /
+    jitter.  Returns (devices, chain spec, events, engine kwargs)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 65)) if seed % 3 else int(rng.integers(65, 513))
+    het = bool(rng.integers(0, 2))
+    devs = []
+    for i in range(n):
+        scale = rng.uniform(0.3, 3.0) if het else 1.0
+        devs.append(mkdev(i, flops=1e12 * scale,
+                          dl=1e8 * (rng.uniform(0.5, 2.0) if het else 1.0),
+                          ul=5e7 * (rng.uniform(0.5, 2.0) if het else 1.0)))
+    n_levels = int(rng.integers(1, 4))
+    chains = []
+    for i, d in enumerate(devs):
+        for lv in range(n_levels):
+            if rng.uniform() < 0.1:
+                chains.append((d.device_id, [], lv))    # zero-item chain
+                continue
+            items = [WorkItem(dl_bytes=float(rng.uniform(0, 2e6)),
+                              flops=float(rng.uniform(1e8, 2e9)),
+                              ul_bytes=float(rng.uniform(0, 1e6))
+                              if rng.uniform() < 0.7 else 0.0,
+                              dl_lat=float(rng.uniform(0, 2e-3)),
+                              ul_lat=float(rng.uniform(0, 2e-3)),
+                              setup=float(rng.uniform(0, 5e-3))
+                              if rng.uniform() < 0.3 else 0.0,
+                              level=lv)
+                     for _ in range(int(rng.integers(1, 4)))]
+            chains.append((d.device_id, items, lv))
+    events = []
+    horizon = 0.2
+    for _ in range(int(rng.integers(0, 4))):
+        kind = rng.integers(0, 3)
+        t = float(rng.uniform(0, horizon))
+        if kind == 0 and n > 1:
+            events.append(ev_mod.fail(t, int(rng.integers(0, n))))
+        elif kind == 1:
+            events.append(ev_mod.slowdown(t, int(rng.integers(0, n)),
+                                          float(rng.uniform(0.5, 8.0))))
+        else:
+            events.append(ev_mod.join(t, mkdev(10_000 + int(
+                rng.integers(0, 100)), flops=2e12)))
+    # drop duplicate simultaneous fails (rejected by validate_events)
+    seen, evs = set(), []
+    for e in events:
+        key = (e.t, e.device_id) if isinstance(e, ev_mod.FailEvent) else None
+        if key is None or key not in seen:
+            evs.append(e)
+            seen.add(key)
+    kw = {}
+    mode = rng.integers(0, 4)
+    if mode == 1:       # shared finite links, roomy (stays batched)
+        kw = dict(ps_egress_bps=1e8 * n * 2.0, ps_ingress_bps=5e7 * n * 2.0)
+    elif mode == 2:     # tight links (often delegates to the oracle)
+        kw = dict(ps_egress_bps=2e8 * max(n // 4, 1),
+                  ps_ingress_bps=1e8 * max(n // 4, 1))
+    elif mode == 3:     # per-PS islands
+        isl = max(int(n // max(rng.integers(1, 5), 1)), 1)
+        kw = dict(ps_egress_bps=1e8 * isl * 1.5, ps_ingress_bps=5e7 * isl,
+                  ps_of={d.device_id: d.device_id % max(n // isl, 1)
+                         for d in devs})
+    if rng.uniform() < 0.25:
+        kw["jitter_alpha"] = float(rng.uniform(1.5, 3.0))
+    return devs, chains, evs, kw
+
+
+def run_pair(seed):
+    devs, chains, evs, kw = random_scenario(seed)
+    reports = []
+    for cls in (TimelineEngine, ArrayTimelineEngine):
+        k = dict(kw)
+        if "jitter_alpha" in k:
+            k["rng"] = np.random.default_rng(seed)
+        eng = cls(devs, events=evs, **k)
+        for did, items, lv in chains:
+            eng.add_chain(did, items, level=lv)
+        try:
+            reports.append(eng.run(opt_tail=0.01))
+        except RuntimeError as e:           # no surviving devices
+            reports.append(str(e))
+    if isinstance(reports[0], str) or isinstance(reports[1], str):
+        assert reports[0] == reports[1]
+        return
+    assert_reports_match(reports[0], reports[1])
+
+
+# ------------------------------------------------- seeded random sweep --
+
+@pytest.mark.parametrize("seed", range(16))
+def test_differential_random_scenarios(seed):
+    """Seeded differential sweep (always runs, hypothesis or not): het
+    on/off, PS caps / islands, random event scripts, jitter seeds."""
+    run_pair(seed)
+
+
+@settings(max_examples=HYP_MAX_EXAMPLES, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_differential_property_sweep(seed):
+    """Property sweep over the full scenario space; the nightly CI job
+    raises REPRO_HYP_MAX_EXAMPLES for a deeper search."""
+    run_pair(seed)
+
+
+# --------------------------------------------- hand-checked micro-cases --
+
+def test_micro_single_chain_hand_check():
+    """One device, one overlapped item with finite links: the engines and
+    the closed form (Eq. 2) agree exactly."""
+    d = mkdev(0, flops=1e9, dl=1e8, ul=1e8)
+    expect = max(1e6 / 1e8, 2e7 / 1e9, 1e6 / 1e8)   # 0.02 s
+    for cls in (TimelineEngine, ArrayTimelineEngine):
+        eng = cls([d], ps_egress_bps=1e9, ps_ingress_bps=1e9)
+        eng.add_chain(0, [WorkItem(dl_bytes=1e6, flops=2e7, ul_bytes=1e6)])
+        rep = eng.run()
+        assert rep.makespan == pytest.approx(expect, rel=1e-12)
+        assert rep.ps_egress_busy == pytest.approx(1e6, rel=1e-9)
+        assert rep.ps_ingress_busy == pytest.approx(1e6, rel=1e-9)
+
+
+def test_micro_fail_mid_level():
+    """Single fail mid-level: the victim's remaining work re-dispatches to
+    the survivor; both engines price the same recovery."""
+    devs = [mkdev(0, flops=1e9), mkdev(1, flops=1e9)]
+    evs = [ev_mod.fail(0.025, device_id=1)]
+    reps = []
+    for cls in (TimelineEngine, ArrayTimelineEngine):
+        eng = cls(devs, events=evs)
+        for did in (0, 1):
+            eng.add_chain(did, [WorkItem(dl_bytes=0.0, flops=2e7,
+                                         ul_bytes=0.0)] * 2)
+        reps.append(eng.run())
+    assert_reports_match(*reps)
+    # hand check: dev1 dies at 0.025 with item 2 in flight (started 0.02,
+    # 0.02 s/item); the lost item re-dispatches to dev0 as a level-mate
+    # chain that runs concurrently with dev0's own (chains overlap by
+    # design): repair spans [0.025, 0.045], dev0's own chain ends 0.04
+    assert reps[0].n_failures == 1
+    assert reps[0].makespan == pytest.approx(0.045, rel=1e-12)
+    assert reps[0].recovery_latency == pytest.approx(0.02, rel=1e-9)
+
+
+def test_micro_ps_saturation_delegates():
+    """PS saturation: the link admits one transfer at a time, so FIFO
+    queueing is real — the array engine must detect its no-queueing proof
+    failing and replay on the oracle, not approximate."""
+    devs = [mkdev(i, dl=1e8) for i in range(4)]
+    reps = []
+    for cls in (TimelineEngine, ArrayTimelineEngine):
+        eng = cls(devs, ps_egress_bps=1.5e8)    # < 4 x 1e8 aggregate
+        for d in devs:
+            eng.add_chain(d.device_id,
+                          [WorkItem(dl_bytes=1e7, flops=1e6, ul_bytes=0.0)])
+        reps.append(eng.run())
+    assert reps[0].ps_egress_wait > 0           # scenario really queues
+    assert_reports_match(*reps)
+    assert reps[1].backend == "event-array"
+
+
+def test_micro_join_resolves_future_levels():
+    """Join re-solve through the real schedule replay: remaining levels
+    re-plan over the enlarged fleet identically on both backends."""
+    rt = CleaveRuntime(arch="opt-13b", fleet=Fleet.sample(12, seed=0))
+    newd = Fleet.sample(13, seed=3).devices[-1]
+    det = rt.simulate(4, 64, backend="event")
+    evs = [join(det.makespan * 0.2, newd)]
+    sca = rt.simulate(4, 64, backend="event", events=evs)
+    arr = rt.simulate(4, 64, backend="event-array", events=evs)
+    assert sca.n_joins == arr.n_joins == 1
+    assert_reports_match(sca, arr)
+    assert arr.makespan < det.makespan * (1 + 1e-9)    # joiner helps
+
+
+def test_runtime_event_array_backend_eventful():
+    """CleaveRuntime.simulate(backend='event-array') prices fail+slowdown
+    scripts identically to the scalar event backend."""
+    rt = CleaveRuntime(arch="opt-13b", fleet=Fleet.sample(16, seed=0))
+    det = rt.simulate(4, 64, backend="event")
+    evs = [fail(det.makespan * 0.3, rt.fleet.devices[1].device_id),
+           slowdown(det.makespan * 0.1, rt.fleet.devices[2].device_id, 4.0)]
+    sca = rt.simulate(4, 64, backend="event", events=evs)
+    arr = rt.simulate(4, 64, backend="event-array", events=evs)
+    assert_reports_match(sca, arr)
+    assert arr.recomputed_fraction > 0          # churn repair really ran
+
+
+def test_runtime_unknown_backend_message():
+    rt = CleaveRuntime(arch="opt-13b", fleet=Fleet.sample(4, seed=0))
+    with pytest.raises(ValueError, match="event-array"):
+        rt.simulate(2, 64, backend="bogus")
+
+
+# ------------------------------------------------------- determinism --
+
+@pytest.mark.parametrize("cls", [TimelineEngine, ArrayTimelineEngine])
+def test_determinism_same_seed_bit_identical(cls):
+    """Same seed -> bit-identical TimelineReport across 5 runs (jittered,
+    eventful) on both engines."""
+    devs = [mkdev(i, flops=1e12 * (1 + i % 3)) for i in range(8)]
+    evs = [ev_mod.fail(0.01, device_id=2),
+           ev_mod.slowdown(0.02, device_id=5, factor=3.0)]
+    outs = []
+    for _ in range(5):
+        eng = cls(devs, events=evs, jitter_alpha=2.0,
+                  rng=np.random.default_rng(123))
+        for d in devs:
+            eng.add_chain(d.device_id,
+                          [WorkItem(dl_bytes=1e6, flops=1e9, ul_bytes=1e5,
+                                    level=lv) for lv in range(2)])
+        rep = eng.run()
+        outs.append((rep.makespan, rep.recovery_latency,
+                     tuple(rep.level_times),
+                     tuple(sorted(rep.chain_completions.items())),
+                     tuple(sorted(rep.device_busy.items()))))
+    assert all(o == outs[0] for o in outs)
+
+
+def test_determinism_jitter_scalar_vs_array_bit_identical():
+    """Jitter delegates through _BlockRNG: the batched uniform stream must
+    be bit-identical to scalar draws, not merely close."""
+    devs = [mkdev(i) for i in range(6)]
+    reps = []
+    for cls in (TimelineEngine, ArrayTimelineEngine):
+        eng = cls(devs, jitter_alpha=1.7, rng=np.random.default_rng(7))
+        for d in devs:
+            eng.add_chain(d.device_id,
+                          [WorkItem(dl_bytes=2e6, flops=2e9, ul_bytes=1e6)])
+        reps.append(eng.run())
+    assert reps[0].makespan == reps[1].makespan          # bitwise
+    assert reps[0].level_times == reps[1].level_times
+
+
+def test_determinism_multi_ps_islands():
+    """Scalar-vs-array equality under ps_of multi-PS link mappings."""
+    devs = [mkdev(i, dl=1e8 * (1 + i % 2)) for i in range(12)]
+    ps_of = {d.device_id: d.device_id % 3 for d in devs}
+    evs = [ev_mod.fail(0.015, device_id=4)]
+    reps = []
+    for cls in (TimelineEngine, ArrayTimelineEngine):
+        eng = cls(devs, ps_egress_bps=1e9, ps_ingress_bps=5e8,
+                  ps_of=ps_of, events=evs)
+        for i, d in enumerate(devs):
+            eng.add_chain(d.device_id,
+                          [WorkItem(dl_bytes=1e6 * (1 + i % 3), flops=1e9,
+                                    ul_bytes=5e5, level=lv)
+                           for lv in range(2)])
+        reps.append(eng.run())
+    assert_reports_match(*reps)
+
+
+# ------------------------------------------------- bulk construction --
+
+def test_add_chains_bulk_equals_add_chain_loop():
+    """add_chains_bulk is exactly a loop of add_chain: same cids, same
+    loads, same report."""
+    devs = [mkdev(i, flops=1e12 * (1 + i % 2)) for i in range(32)]
+    evs = [ev_mod.fail(0.004, device_id=3)]
+    dl = np.linspace(1e5, 1e6, 32)
+    fl = np.linspace(1e8, 1e9, 32)
+    ul = np.linspace(5e4, 5e5, 32)
+
+    loop = ArrayTimelineEngine(devs, events=evs)
+    for lv in range(2):
+        for i, d in enumerate(devs):
+            loop.add_chain(d.device_id,
+                           [WorkItem(dl_bytes=float(dl[i]),
+                                     flops=float(fl[i]),
+                                     ul_bytes=float(ul[i]), level=lv)] * 2,
+                           level=lv)
+    bulk = ArrayTimelineEngine(devs, events=evs)
+    for lv in range(2):
+        cids = bulk.add_chains_bulk([d.device_id for d in devs],
+                                    dl, fl, ul, level=lv,
+                                    items_per_chain=2)
+        assert list(cids) == list(range(lv * 32, (lv + 1) * 32))
+    bulk_rep = bulk.run()
+    assert_reports_match(loop.run(), bulk_rep)
+
+    scalar = TimelineEngine(devs, events=evs)
+    for lv in range(2):
+        for i, d in enumerate(devs):
+            scalar.add_chain(d.device_id,
+                             [WorkItem(dl_bytes=float(dl[i]),
+                                       flops=float(fl[i]),
+                                       ul_bytes=float(ul[i]),
+                                       level=lv)] * 2, level=lv)
+    assert_reports_match(scalar.run(), bulk_rep)
+
+
+def test_bulk_unknown_device_rejected():
+    eng = ArrayTimelineEngine([mkdev(0)])
+    with pytest.raises(KeyError, match="unknown device 7"):
+        eng.add_chains_bulk([0, 7], 1e5, 1e8, 0.0)
+    with pytest.raises(KeyError, match="unknown device 9"):
+        eng.add_chain(9, [WorkItem(dl_bytes=1e5, flops=1e8, ul_bytes=0.0)])
+
+
+def test_lazy_map_mapping_contract():
+    m = _LazyMap(np.asarray([3, 5, 9]), np.asarray([0.3, 0.5, 0.9]),
+                 extra={11: 1.1})
+    assert len(m) == 4
+    assert set(m) == {3, 5, 9, 11}
+    assert m[5] == pytest.approx(0.5)
+    assert m[11] == pytest.approx(1.1)
+    assert m.get(42) is None
+    with pytest.raises(KeyError):
+        m[42]
+    assert sorted(m.values()) == pytest.approx([0.3, 0.5, 0.9, 1.1])
+
+
+# ------------------------------------------- events.py validation fixes --
+
+def test_validate_rejects_negative_time():
+    with pytest.raises(ValueError, match="event time must be >= 0"):
+        ev_mod.validate_events([ev_mod.fail(-0.1, device_id=0)])
+
+
+def test_validate_rejects_non_event():
+    with pytest.raises(TypeError, match="not a timeline event"):
+        ev_mod.validate_events([("fail", 0.1, 0)])
+
+
+def test_validate_rejects_duplicate_simultaneous_fail():
+    with pytest.raises(ValueError, match="duplicate simultaneous fail"):
+        ev_mod.validate_events([ev_mod.fail(1.0, device_id=3),
+                                ev_mod.fail(1.0, device_id=3)])
+    # same device at different instants is a legal (if doomed) script
+    ev_mod.validate_events([ev_mod.fail(1.0, device_id=3),
+                            ev_mod.fail(2.0, device_id=3)])
+
+
+def test_validate_rejects_unknown_device():
+    with pytest.raises(ValueError, match="targets unknown device 9"):
+        ev_mod.validate_events([ev_mod.fail(1.0, device_id=9)],
+                               device_ids={0, 1})
+    # a join introducing the id makes the same script legal
+    ev_mod.validate_events(
+        [ev_mod.join(0.5, mkdev(9)), ev_mod.fail(1.0, device_id=9)],
+        device_ids={0, 1})
+
+
+@pytest.mark.parametrize("cls", [TimelineEngine, ArrayTimelineEngine])
+def test_engine_ctor_validates_events(cls):
+    devs = [mkdev(0), mkdev(1)]
+    with pytest.raises(ValueError, match="targets unknown device 5"):
+        cls(devs, events=[ev_mod.slowdown(0.1, device_id=5, factor=2.0)])
